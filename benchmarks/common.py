@@ -1,0 +1,60 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import AdsalaRuntime, ModelRegistry
+from repro.core.timing import time_callable
+from repro.kernels.cpu_blocked import make_operands, run_blocked
+from repro.kernels.ops import knob_space_for
+
+RUNS = Path(__file__).resolve().parents[1] / "runs"
+ADSALA = RUNS / "adsala"
+
+PRECISIONS = {"s": np.float32, "d": np.float64}
+OPS = ("gemm", "symm", "syrk", "syr2k", "trmm", "trsm")
+
+
+def load_runtime() -> AdsalaRuntime | None:
+    root = ADSALA / "models"
+    if not root.exists():
+        return None
+    rt = AdsalaRuntime()
+    ModelRegistry(root).load_into(rt)
+    return rt
+
+
+def default_knob_from_dataset(op: str, prec: str):
+    """The calibration dataset's baseline (max-parallelism) knob."""
+    import json
+    ds = np.load(ADSALA / "datasets" / f"{op}_{prec}.npz")
+    knobs = json.loads(str(ds["knobs"]))
+    from repro.core.knobs import Knob
+    return Knob(tuple(sorted(knobs[int(ds["default_idx"])].items())))
+
+
+def measure_speedup(op: str, prec: str, rt: AdsalaRuntime, dims: tuple,
+                    *, repeats: int = 2) -> dict:
+    """One paper-style measurement: t_default vs t_tuned(+t_eval)."""
+    dtype = PRECISIONS[prec]
+    dtype_bytes = np.dtype(dtype).itemsize
+    operands = make_operands(op, dims, dtype, seed=hash(dims) % 9973)
+    default = default_knob_from_dataset(op, prec)
+    t0 = time.perf_counter()
+    knob = rt.select(op, dims, dtype_bytes=dtype_bytes)
+    t_eval = time.perf_counter() - t0
+    t_def = time_callable(lambda: run_blocked(op, operands, default),
+                          warmup=1, repeats=repeats)
+    t_tuned = time_callable(lambda: run_blocked(op, operands, knob),
+                            warmup=1, repeats=repeats)
+    return {"dims": dims, "t_default": t_def, "t_tuned": t_tuned,
+            "t_eval": t_eval, "speedup": t_def / (t_tuned + t_eval),
+            "knob": knob.dict, "default": default.dict}
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"

@@ -1,0 +1,47 @@
+"""Paper Figures 4/5 — heatmap of the optimal execution config over the
+dimension space, per subroutine × precision (CSV: dims → argmin-measured
+knob and its grid parallelism = the nt analogue)."""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from .common import ADSALA, OPS, csv_row
+
+
+def run(quick: bool = False) -> list[str]:
+    ds_dir = ADSALA / "datasets"
+    if not ds_dir.exists():
+        return [csv_row("fig45.skipped", 0.0, "no-datasets")]
+    rows = []
+    out = {}
+    for op in OPS if not quick else ("gemm",):
+        for prec in ("s", "d"):
+            f = ds_dir / f"{op}_{prec}.npz"
+            if not f.exists():
+                continue
+            d = np.load(f)
+            dims, times = d["dims"], d["times"]
+            knobs = json.loads(str(d["knobs"]))
+            best = times.argmin(axis=1)
+            # how often does the default (max-parallelism) config win? —
+            # the paper's core observation is that it usually does NOT.
+            default_idx = int(d["default_idx"])
+            default_wins = float(np.mean(best == default_idx))
+            cells = [{"dims": dims[i].tolist(),
+                      "best_knob": knobs[int(best[i])],
+                      "best_ms": float(times[i, best[i]] * 1e3),
+                      "default_ms": float(times[i, default_idx] * 1e3)}
+                     for i in range(len(dims))]
+            out[f"{prec}{op}"] = cells
+            headroom = float(np.mean(times[:, default_idx] /
+                                     times.min(axis=1)))
+            rows.append(csv_row(
+                f"fig45.{prec}{op}", float(times.min(axis=1).mean() * 1e6),
+                f"default_wins={default_wins:.2f};"
+                f"headroom={headroom:.2f}x"))
+    (ADSALA / "fig45_heatmaps.json").write_text(
+        json.dumps(out, indent=1, default=float))
+    return rows

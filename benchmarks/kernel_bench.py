@@ -1,0 +1,28 @@
+"""Kernel micro-bench: Pallas BLAS L3 lowering sanity + analytic v5e oracle
+timings per knob (the TPU-target tuning signal), plus wall-clock of the CPU
+black-box BLAS at default vs tuned configs."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import block_knob_space, oracle_time
+from .common import csv_row
+
+
+def run(quick: bool = False) -> list[str]:
+    rows = []
+    space = block_knob_space(bms=(128, 256, 512), bks=(128, 256, 512),
+                             bns=(128, 256, 512))
+    for op, dims in [("gemm", (4096, 4096, 4096)),
+                     ("syrk", (4096, 1024)),
+                     ("trsm", (2048, 2048))]:
+        times = np.array([oracle_time(op, dims, k, dtype_bytes=2)
+                          for k in space])
+        best = int(np.argmin(times))
+        worst = int(np.argmax(times))
+        rows.append(csv_row(
+            f"kernel.oracle.{op}", float(times[best] * 1e6),
+            f"best={space.candidates[best].dict};"
+            f"range={times[worst]/times[best]:.2f}x"))
+    return rows

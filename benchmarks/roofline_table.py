@@ -1,0 +1,32 @@
+"""§Roofline — the three-term roofline per (arch × shape × mesh) cell,
+aggregated from the dry-run artifacts (runs/dryrun/*.json)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import RUNS, csv_row
+
+
+def run(quick: bool = False) -> list[str]:
+    d = RUNS / "dryrun"
+    if not d.exists():
+        return [csv_row("roofline.skipped", 0.0, "no-dryrun-artifacts")]
+    rows = []
+    for f in sorted(d.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok" or rec.get("tag"):
+            continue
+        r = rec["roofline"]
+        dominant_s = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        rows.append(csv_row(
+            f"roofline.{rec['arch']}.{rec['shape']}.{rec['mesh']}",
+            dominant_s * 1e6,
+            f"bottleneck={r['bottleneck']};"
+            f"comp_ms={r['t_compute']*1e3:.1f};"
+            f"mem_ms={r['t_memory']*1e3:.1f};"
+            f"coll_ms={r['t_collective']*1e3:.1f};"
+            f"useful={r['useful_ratio']:.2f};"
+            f"peakGB={rec['memory']['peak_bytes']/1e9:.1f}"))
+    return rows

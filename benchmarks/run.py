@@ -1,0 +1,55 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  table7.*    — paper Table VII: measured ADSALA speedups per op × precision
+  table45.*   — paper Tables IV/V: selected best model per subroutine
+  table6.*    — paper Table VI: per-model RMSE / eval-time / est. speedup
+  fig45.*     — paper Figs 4/5: optimal-config heatmap data + headroom
+  table8.*    — paper Table VIII: kernel vs overhead runtime decomposition
+  roofline.*  — §Roofline: three-term roofline per (arch × shape × mesh)
+  kernel.*    — TPU-target kernel tuning signal (analytic v5e oracle)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--only", default="")
+    args = p.parse_args(argv)
+
+    from . import (fig45_heatmaps, kernel_bench, roofline_table,
+                   table7_speedup, table46_model_selection, table8_profiling)
+    benches = [
+        ("table46", table46_model_selection.run),
+        ("fig45", fig45_heatmaps.run),
+        ("table8", table8_profiling.run),
+        ("kernel", kernel_bench.run),
+        ("roofline", roofline_table.run),
+        ("table7", table7_speedup.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            for row in fn(quick=args.quick):
+                print(row)
+        except Exception as e:   # noqa: BLE001
+            failures += 1
+            print(f"{name}.ERROR,0.0,{type(e).__name__}:{e}")
+        print(f"{name}.wall,{(time.perf_counter()-t0)*1e6:.0f},elapsed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

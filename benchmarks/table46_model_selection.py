@@ -1,0 +1,29 @@
+"""Paper Tables IV/V (best model per subroutine) and VI (per-model detail:
+normalised RMSE, ideal/estimated speedups, evaluation time) — read from the
+calibration report produced at install time."""
+
+from __future__ import annotations
+
+import json
+
+from .common import ADSALA, csv_row
+
+
+def run(quick: bool = False) -> list[str]:
+    path = ADSALA / "calibration_report.json"
+    if not path.exists():
+        return [csv_row("table46.skipped", 0.0, "no-calibration-report")]
+    report = json.loads(path.read_text())
+    rows = []
+    for entry in report:
+        sub = f"{entry['prec']}{entry['op']}"
+        best = entry["best_model"]
+        # Table VI detail: eval time + estimated speedup per candidate
+        for m in entry["models"]:
+            rows.append(csv_row(
+                f"table6.{sub}.{m['name']}", m["eval_time_us"],
+                f"nrmse={m['normalized_rmse']:.2f};"
+                f"ideal={m['ideal_mean_speedup']:.2f};"
+                f"est={m['estimated_mean_speedup']:.2f}"))
+        rows.append(csv_row(f"table45.{sub}", 0.0, f"best={best}"))
+    return rows

@@ -1,0 +1,66 @@
+"""Paper Table VII — measured speedup statistics per subroutine × precision.
+
+Fresh scrambled-Halton test dims (disjoint seed from calibration, as the
+paper prescribes), each timed at the default (max-parallelism) config vs.
+the ADSALA-predicted config including the live model-evaluation time.
+Reports Mean/Std/Min/25%/50%/75%/Max speedup — the paper's headline table.
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core.features import SUBROUTINE_NDIMS, footprint_words
+from repro.core.halton import sample_dims
+from .common import (ADSALA, OPS, PRECISIONS, csv_row, load_runtime,
+                     measure_speedup)
+
+
+def run(n_test: int = 8, quick: bool = False) -> list[str]:
+    rt = load_runtime()
+    rows = []
+    if rt is None:
+        return [csv_row("table7.skipped", 0.0, "no-calibration-artifacts")]
+    results = {}
+    ops = OPS if not quick else ("gemm", "symm")
+    for op in ops:
+        ndims = SUBROUTINE_NDIMS[op]
+        for prec in ("s", "d"):
+            dtype_bytes = np.dtype(PRECISIONS[prec]).itemsize
+
+            def fp(d):
+                return footprint_words(op, d) * dtype_bytes
+
+            # paper tests 2000–7000 dims where ops run 10–1000 ms; the
+            # scaled-down analogue here is 128–512 (0.5–20 ms ops) so the
+            # per-call model evaluation (~130 µs) plays the same ~1% role.
+            # Below that regime the LRU memo cache is what amortises eval.
+            dims_list = sample_dims(n_test, ndims, lo=128, hi=512,
+                                    max_footprint_bytes=6_000_000,
+                                    footprint_fn=fp, seed=12345)
+            sp, total_us = [], 0.0
+            recs = []
+            for drow in dims_list:
+                r = measure_speedup(op, prec, rt,
+                                    tuple(int(v) for v in drow))
+                sp.append(r["speedup"])
+                total_us += (r["t_tuned"] + r["t_eval"]) * 1e6
+                recs.append(r)
+            sp = np.array(sp)
+            stats = {"mean": sp.mean(), "std": sp.std(), "min": sp.min(),
+                     "p25": np.percentile(sp, 25), "p50": np.median(sp),
+                     "p75": np.percentile(sp, 75), "max": sp.max()}
+            results[f"{prec}{op}"] = {"stats": stats,
+                                      "cases": [
+                                          {**r, "dims": list(r["dims"])}
+                                          for r in recs]}
+            rows.append(csv_row(
+                f"table7.{prec}{op}", total_us / len(sp),
+                f"mean={stats['mean']:.2f};p50={stats['p50']:.2f};"
+                f"max={stats['max']:.2f}"))
+    out = ADSALA / "table7_speedup.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(results, indent=2, default=float))
+    return rows

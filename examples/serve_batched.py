@@ -1,0 +1,22 @@
+"""Batched serving example: prefill a batch of prompts, then decode with the
+same serve_step the multi-pod dry-run lowers for decode_32k / long_500k.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch rwkv6-1.6b
+"""
+
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="llama3-8b")
+    args = p.parse_args()
+    serve_main(["--arch", args.arch, "--smoke", "--requests", "4",
+                "--prompt-len", "24", "--max-new", "16",
+                "--temperature", "0.8"])
+
+
+if __name__ == "__main__":
+    main()

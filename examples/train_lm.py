@@ -1,0 +1,46 @@
+"""End-to-end driver: train a reduced llama3-family model for a few hundred
+steps on the synthetic Markov LM task, with checkpointing + auto-resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+The loss must drop well below the uniform floor (ln V ≈ 5.55) — the same
+substrate (model zoo + optimizer + data + checkpointing + fault tolerance)
+drives the production mesh on real hardware via repro.launch.train.
+"""
+
+import argparse
+import dataclasses
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_smoke_config
+from repro.data import SyntheticLMDataset
+from repro.distributed import best_mesh
+from repro.launch.train import TrainLoop
+from repro.optim import AdamWConfig
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--arch", default="llama3-8b")
+    p.add_argument("--ckpt", default="runs/example_train")
+    args = p.parse_args()
+
+    cfg = dataclasses.replace(get_smoke_config(args.arch),
+                              n_layers=4, d_model=128, n_heads=4, kv_heads=2,
+                              d_ff=320, vocab=512)
+    ds = SyntheticLMDataset(vocab=cfg.vocab, seq_len=64, global_batch=8)
+    loop = TrainLoop(
+        cfg=cfg,
+        adamw=AdamWConfig(lr=1e-3, total_steps=args.steps, warmup_steps=20),
+        mesh=best_mesh(), ckpt=Checkpointer(args.ckpt), dataset=ds,
+        ckpt_every=100, log_every=25)
+    out = loop.run(args.steps)
+    first = out["history"][0]["loss"] if out["history"] else float("nan")
+    last = out["history"][-1]["loss"] if out["history"] else float("nan")
+    print(f"loss: {first:.3f} → {last:.3f} over {out['final_step']} steps")
+    assert last < first, "training did not reduce the loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Render EXPERIMENTS.md tables from runs/ artifacts (dry-run JSONs +
+calibration reports + benchmark JSONs).  Prints markdown to stdout."""
+
+import json
+import sys
+from pathlib import Path
+
+RUNS = Path(__file__).resolve().parents[1] / "runs"
+
+
+def dryrun_records():
+    recs = []
+    for f in sorted((RUNS / "dryrun").glob("*.json")):
+        r = json.loads(f.read_text())
+        if not r.get("tag"):
+            recs.append(r)
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.2f}"
+
+
+def dryrun_table():
+    print("| arch | shape | mesh | chips | compile s | peak GB/dev | "
+          "HLO GF/dev (corr.) | coll GB/dev | #coll ops |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in dryrun_records():
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | "
+                  f"skipped: {r['reason'][:40]}… | — | — | — |")
+            continue
+        c = r["cost"]
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['chips']} | "
+              f"{r['compile_s']} | {fmt_bytes(r['memory']['peak_bytes'])} | "
+              f"{c['flops_per_device']/1e9:.0f} | "
+              f"{c['collective_bytes']/1e9:.2f} | "
+              f"{r['collectives'].get('total_count', 0)} |")
+
+
+def roofline_table():
+    print("| arch | shape | mesh | t_comp s | t_mem s | t_coll s | "
+          "bottleneck | MODEL/HLO | note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in dryrun_records():
+        if r["status"] != "ok" or r["mesh"] != "single":
+            continue
+        rf = r["roofline"]
+        dom = max(rf["t_compute"], rf["t_memory"], rf["t_collective"])
+        note = ""
+        if rf["useful_ratio"] < 0.3:
+            note = "head-repl. waste" if "moe" in r["arch"] or "qwen" in \
+                r["arch"] else "low-intensity"
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+              f"{rf['t_compute']:.3f} | {rf['t_memory']:.3f} | "
+              f"{rf['t_collective']:.3f} | {rf['bottleneck']} | "
+              f"{rf['useful_ratio']:.2f} | {note} |")
+    # skipped cells
+    for r in dryrun_records():
+        if r["status"] == "skipped" and r["mesh"] == "single":
+            print(f"| {r['arch']} | {r['shape']} | single | — | — | — | "
+                  f"skip | — | {r['reason'][:48]} |")
+
+
+def calibration_table():
+    rep = json.loads((RUNS / "adsala" / "calibration_report.json"
+                      ).read_text())
+    print("| subroutine | best model | gather s | samples | knobs |")
+    print("|---|---|---|---|---|")
+    for e in rep:
+        print(f"| {e['prec']}{e['op']} | {e['best_model']} | "
+              f"{e['gather_seconds']} | {e['n_samples']} | {e['n_knobs']} |")
+
+
+def table7():
+    f = RUNS / "adsala" / "table7_speedup.json"
+    if not f.exists():
+        print("(table7 not yet generated)")
+        return
+    data = json.loads(f.read_text())
+    print("| subroutine | mean | std | min | 25% | 50% | 75% | max |")
+    print("|---|---|---|---|---|---|---|---|")
+    for sub, v in data.items():
+        s = v["stats"]
+        print(f"| {sub} | {s['mean']:.2f} | {s['std']:.2f} | {s['min']:.2f} |"
+              f" {s['p25']:.2f} | {s['p50']:.2f} | {s['p75']:.2f} | "
+              f"{s['max']:.2f} |")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### Dry-run table\n")
+        dryrun_table()
+    if which in ("all", "roofline"):
+        print("\n### Roofline table (single-pod)\n")
+        roofline_table()
+    if which in ("all", "calib"):
+        print("\n### Calibration summary\n")
+        calibration_table()
+    if which in ("all", "table7"):
+        print("\n### Table VII speedups\n")
+        table7()

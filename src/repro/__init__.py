@@ -1,0 +1,4 @@
+"""repro — ADSALA-JAX: ML-driven runtime optimization of BLAS Level 3,
+reproduced and extended as a TPU-native JAX training/serving framework."""
+
+__version__ = "0.1.0"

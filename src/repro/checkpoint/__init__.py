@@ -1,0 +1,3 @@
+"""Fault-tolerant checkpointing: sharded, async, atomic, mesh-agnostic."""
+from .checkpointer import Checkpointer
+__all__ = ["Checkpointer"]

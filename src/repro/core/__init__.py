@@ -1,0 +1,38 @@
+"""ADSALA core — the paper's contribution: ML-driven runtime selection of
+BLAS L3 execution configs (paper: thread count; TPU: Pallas block config).
+
+Public surface:
+    install_subroutine  — full install-time pipeline for one subroutine
+    TunedSubroutine     — the persisted artifact (model + pipeline + knobs)
+    AdsalaRuntime       — per-process runtime decision engine with memo cache
+    ModelRegistry       — atomic msgpack persistence
+    block_knob_space / thread_knob_space — the tunable config spaces
+    oracle_time         — analytic v5e time oracle (CPU-only calibration)
+"""
+
+from .features import (SUBROUTINES, SUBROUTINE_NDIMS, build_features,
+                       feature_names, footprint_words)
+from .halton import halton_sequence, sample_dims, scrambled_halton
+from .knobs import Knob, KnobSpace, block_knob_space, thread_knob_space
+from .dataset import TimingDataset, gather
+from .oracle import V5E, TpuSpec, oracle_time
+from .preprocess import PreprocessPipeline, YeoJohnsonTransformer
+from .lof import lof_scores, remove_outliers
+from .selection import ModelReport, evaluate_candidates, select_best
+from .tuner import TunedSubroutine, install_subroutine
+from .runtime import AdsalaRuntime, global_runtime
+from .registry import (ModelRegistry, load_subroutine, pack_state,
+                       save_subroutine, unpack_state)
+from .distill import DistilledTree
+
+__all__ = [
+    "SUBROUTINES", "SUBROUTINE_NDIMS", "build_features", "feature_names",
+    "footprint_words", "halton_sequence", "sample_dims", "scrambled_halton",
+    "Knob", "KnobSpace", "block_knob_space", "thread_knob_space",
+    "TimingDataset", "gather", "V5E", "TpuSpec", "oracle_time",
+    "PreprocessPipeline", "YeoJohnsonTransformer", "lof_scores",
+    "remove_outliers", "ModelReport", "evaluate_candidates", "select_best",
+    "TunedSubroutine", "install_subroutine", "AdsalaRuntime",
+    "global_runtime", "ModelRegistry", "load_subroutine", "pack_state",
+    "save_subroutine", "unpack_state", "DistilledTree",
+]

@@ -1,0 +1,120 @@
+"""Feature engineering for BLAS L3 runtime models (paper Table III).
+
+Two feature sets, chosen by the number of free matrix dimensions of the
+subroutine:
+
+  3-dim (GEMM):                m, k, n, nt, m*k, m*n, k*n, m*k*n, footprint,
+                               m/nt, k/nt, n/nt, m*k/nt, m*n/nt, k*n/nt,
+                               m*k*n/nt, footprint/nt
+  2-dim (SYMM/SYRK/SYR2K/TRMM/TRSM):
+                               m, n, nt, m*n, footprint,
+                               m/nt, n/nt, m*n/nt, footprint/nt
+
+``nt`` is the parallelism measure of the execution config (thread count on
+CPU; number of parallel Pallas grid cells on TPU — see DESIGN.md §2).
+``footprint`` is the summed size, in words, of the matrices the subroutine
+reads/writes (paper footnote 1: overwritten operands counted once).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "SUBROUTINES", "SUBROUTINE_NDIMS", "footprint_words",
+    "footprint_words_vec",
+    "feature_names", "build_features",
+]
+
+# dims per subroutine (paper Table I). GEMM: (m,k,n); SYMM/TRMM/TRSM: (m,n);
+# SYRK/SYR2K: (n,k) — treated as the generic 2-dim pair, in listed order.
+SUBROUTINE_NDIMS = {
+    "gemm": 3,
+    "symm": 2,
+    "syrk": 2,
+    "syr2k": 2,
+    "trmm": 2,
+    "trsm": 2,
+}
+SUBROUTINES = tuple(SUBROUTINE_NDIMS)
+
+
+def footprint_words(op: str, dims: tuple[int, ...]) -> int:
+    """Summed matrix sizes in words (paper's memory_footprint feature)."""
+    if op == "gemm":
+        m, k, n = dims
+        return m * k + k * n + m * n
+    if op == "symm":
+        m, n = dims
+        return m * m + 2 * m * n           # A(mxm) + B(mxn) + C(mxn)
+    if op == "syrk":
+        n, k = dims
+        return n * k + n * n               # A(nxk) + C(nxn)
+    if op == "syr2k":
+        n, k = dims
+        return 2 * n * k + n * n           # A + B (nxk) + C(nxn)
+    if op in ("trmm", "trsm"):
+        m, n = dims
+        return m * m + m * n               # A(mxm) + B(mxn); B overwritten
+    raise ValueError(f"unknown subroutine {op!r}")
+
+
+def footprint_words_vec(op: str, dims: np.ndarray) -> np.ndarray:
+    """Vectorised footprint (runtime eval path: called per BLAS decision)."""
+    d = np.asarray(dims, dtype=np.float64)
+    if op == "gemm":
+        m, k, n = d[:, 0], d[:, 1], d[:, 2]
+        return m * k + k * n + m * n
+    a, b = d[:, 0], d[:, 1]
+    if op == "symm":
+        return a * a + 2 * a * b
+    if op == "syrk":
+        return a * b + a * a
+    if op == "syr2k":
+        return 2 * a * b + a * a
+    return a * a + a * b          # trmm / trsm
+
+
+def feature_names(ndims: int) -> list[str]:
+    if ndims == 3:
+        return [
+            "m", "k", "n", "nt",
+            "m*k", "m*n", "k*n", "m*k*n", "footprint",
+            "m/nt", "k/nt", "n/nt",
+            "m*k/nt", "m*n/nt", "k*n/nt", "m*k*n/nt", "footprint/nt",
+        ]
+    if ndims == 2:
+        return [
+            "m", "n", "nt", "m*n", "footprint",
+            "m/nt", "n/nt", "m*n/nt", "footprint/nt",
+        ]
+    raise ValueError(f"ndims must be 2 or 3, got {ndims}")
+
+
+def build_features(op: str, dims: np.ndarray, nt: np.ndarray) -> np.ndarray:
+    """Build the Table-III feature matrix.
+
+    dims: (N, ndims) int array of matrix dimensions.
+    nt:   (N,) parallelism measure per sample.
+    Returns (N, n_features) float64.
+    """
+    dims = np.asarray(dims, dtype=np.float64)
+    nt = np.asarray(nt, dtype=np.float64).reshape(-1)
+    ndims = SUBROUTINE_NDIMS[op]
+    assert dims.shape[1] == ndims, (op, dims.shape)
+    fp = footprint_words_vec(op, dims)
+    if ndims == 3:
+        m, k, n = dims[:, 0], dims[:, 1], dims[:, 2]
+        cols = [
+            m, k, n, nt,
+            m * k, m * n, k * n, m * k * n, fp,
+            m / nt, k / nt, n / nt,
+            m * k / nt, m * n / nt, k * n / nt, m * k * n / nt, fp / nt,
+        ]
+    else:
+        m, n = dims[:, 0], dims[:, 1]
+        cols = [
+            m, n, nt, m * n, fp,
+            m / nt, n / nt, m * n / nt, fp / nt,
+        ]
+    return np.stack(cols, axis=1)

@@ -1,0 +1,49 @@
+"""k-Nearest-Neighbours regressor (brute-force, distance-weighted option)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .base import Estimator, register
+
+__all__ = ["KNN"]
+
+
+@register
+class KNN(Estimator):
+    NAME = "KNN"
+    PARAM_GRID = {"k": [3, 5, 9, 15], "weights": ["uniform", "distance"]}
+
+    def __init__(self, k: int = 5, weights: str = "uniform") -> None:
+        self.k = k
+        self.weights = weights
+        self.X_: np.ndarray | None = None
+        self.y_: np.ndarray | None = None
+
+    def fit(self, X, y):
+        self.X_ = np.asarray(X, dtype=np.float64)
+        self.y_ = np.asarray(y, dtype=np.float64)
+        return self
+
+    def predict(self, X):
+        X = np.asarray(X, dtype=np.float64)
+        k = min(self.k, self.X_.shape[0])
+        # (q, n) squared distances
+        d2 = ((X[:, None, :] - self.X_[None, :, :]) ** 2).sum(-1)
+        nn = np.argpartition(d2, k - 1, axis=1)[:, :k]
+        ny = self.y_[nn]
+        if self.weights == "distance":
+            nd = np.sqrt(np.take_along_axis(d2, nn, axis=1))
+            w = 1.0 / np.maximum(nd, 1e-12)
+            return (w * ny).sum(1) / w.sum(1)
+        return ny.mean(1)
+
+    def get_state(self):
+        return {"X": self.X_, "y": self.y_, "k": self.k,
+                "weights": self.weights}
+
+    def set_state(self, s):
+        self.X_ = np.asarray(s["X"], dtype=np.float64)
+        self.y_ = np.asarray(s["y"], dtype=np.float64)
+        self.k = int(s["k"])
+        self.weights = str(s["weights"])

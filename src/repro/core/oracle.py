@@ -1,0 +1,126 @@
+"""Analytic TPU-v5e time oracle for BLAS L3 block configs.
+
+The paper gathers *measured* wall-clock timings at install time.  On real TPU
+hardware this framework does exactly that (the same ``dataset.gather`` sweep,
+timing ``kernels.ops`` calls).  In this CPU-only container the TPU *target*
+cannot be timed, so the install pipeline can alternatively be pointed at this
+analytic oracle — a three-term roofline model of a blocked BLAS kernel on one
+v5e core — keeping every other stage (sampling, features, preprocessing,
+model selection, runtime argmin) identical.  DESIGN.md §2 records this
+adaptation.
+
+Model for C[m,n] += A[m,k]·B[k,n] tiled (bm, bk, bn):
+
+  compute   = useful_flops / (peak_flops · mxu_util(bm,bk,bn))
+  memory    = hbm_bytes(blocking) / hbm_bw        (A re-read ⌈n/bn⌉ times,
+                                                   B re-read ⌈m/bm⌉ times,
+                                                   C read+written once)
+  overhead  = grid_cells · per_step_cost          (pipeline bubbles, DMA setup)
+
+  t = max(compute, memory) + overhead  (+ optional lognormal noise)
+
+The SYMM/SYRK/SYR2K/TRMM/TRSM variants adjust flops/bytes per their
+triangular/symmetric structure and the kernel variant ('full' vs 'tri').
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+__all__ = ["TpuSpec", "V5E", "oracle_time"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuSpec:
+    peak_flops_bf16: float = 197e12
+    peak_flops_f32: float = 98.5e12        # v5e MXU f32 ≈ half bf16
+    hbm_bw: float = 819e9                  # bytes/s
+    vmem_bytes: int = 128 * 1024 * 1024
+    grid_step_cost_s: float = 1.2e-6       # DMA issue + pipeline bubble / cell
+    mxu_dim: int = 128
+
+
+V5E = TpuSpec()
+
+
+def _mxu_util(bm: int, bk: int, bn: int, spec: TpuSpec) -> float:
+    """MXU utilisation penalty for tiles that under-fill the 128x128 array
+    or are too small to hide the systolic pipeline latency."""
+    d = spec.mxu_dim
+    fill = min(bm / d, 1.0) * min(bn / d, 1.0) * min(bk / d, 1.0)
+    # small-k tiles pay the systolic drain every pass
+    drain = bk / (bk + d)
+    return max(fill * drain, 0.05)
+
+
+def _flops_bytes(op: str, dims: tuple[int, ...], knob: dict,
+                 dtype_bytes: int) -> tuple[float, float]:
+    bm, bk, bn = knob["bm"], knob["bk"], knob["bn"]
+    variant = knob.get("variant", "full")
+    if op == "gemm":
+        m, k, n = dims
+        flops = 2.0 * m * k * n
+        rbytes = dtype_bytes * (m * k * math.ceil(n / bn)
+                                + k * n * math.ceil(m / bm) + 2 * m * n)
+        return flops, rbytes
+    if op == "symm":
+        m, n = dims
+        flops = 2.0 * m * m * n
+        rbytes = dtype_bytes * (m * m * math.ceil(n / bn)
+                                + m * n * math.ceil(m / bm) + 2 * m * n)
+        return flops, rbytes
+    if op in ("syrk", "syr2k"):
+        n, k = dims
+        mult = 2.0 if op == "syr2k" else 1.0
+        tri = 0.55 if variant == "tri" else 1.0   # tri kernels do ~half FLOPs
+        flops = mult * 2.0 * n * n * k * tri
+        rbytes = dtype_bytes * (mult * n * k * math.ceil(n / bn) * tri
+                                + 2 * n * n)
+        return flops, rbytes
+    if op in ("trmm", "trsm"):
+        m, n = dims
+        tri = 0.55 if variant == "tri" else 1.0
+        flops = m * m * n * tri * (1.0 if op == "trmm" else 1.0)
+        flops *= 2.0
+        rbytes = dtype_bytes * (m * m * math.ceil(n / bn) * tri
+                                + 2 * m * n * math.ceil(m / bm))
+        return flops, rbytes
+    raise ValueError(op)
+
+
+def _grid_cells(op: str, dims: tuple[int, ...], knob: dict) -> int:
+    bm, bk, bn = knob["bm"], knob["bk"], knob["bn"]
+    if op == "gemm":
+        m, k, n = dims
+    elif op == "symm":
+        m, n = dims
+        k = m
+    elif op in ("syrk", "syr2k"):
+        n, k = dims
+        m = n
+    else:  # trmm/trsm
+        m, n = dims
+        k = m
+    return (math.ceil(m / bm) * math.ceil(n / bn) * math.ceil(k / bk))
+
+
+def oracle_time(op: str, dims: tuple[int, ...], knob, *,
+                dtype_bytes: int = 2, spec: TpuSpec = V5E,
+                noise_rng: np.random.Generator | None = None,
+                noise_sigma: float = 0.03) -> float:
+    """Predicted seconds for one kernel call on one v5e core."""
+    kd = knob.dict if hasattr(knob, "dict") else dict(knob)
+    flops, rbytes = _flops_bytes(op, tuple(int(d) for d in dims), kd,
+                                 dtype_bytes)
+    peak = spec.peak_flops_bf16 if dtype_bytes == 2 else spec.peak_flops_f32
+    util = _mxu_util(kd["bm"], kd["bk"], kd["bn"], spec)
+    t_compute = flops / (peak * util)
+    t_memory = rbytes / spec.hbm_bw
+    t_overhead = _grid_cells(op, dims, kd) * spec.grid_step_cost_s
+    t = max(t_compute, t_memory) + t_overhead
+    if noise_rng is not None:
+        t *= float(np.exp(noise_rng.normal(0.0, noise_sigma)))
+    return float(t)

@@ -1,0 +1,115 @@
+"""Persisted model store: TunedSubroutine ↔ msgpack files (paper Fig. 1a:
+"two files containing the configurations together with the production-ready
+ML model will be saved for later use at runtime").
+
+Serialisation is structural (no pickle): numpy arrays are encoded as
+``{__nd__: 1, dtype, shape, data}`` msgpack maps, so artifacts are portable
+across Python versions and safe to load.  Writes are atomic
+(tmp-file + rename) so a preempted install never leaves a torn artifact.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+from pathlib import Path
+
+import msgpack
+import numpy as np
+
+from .knobs import KnobSpace
+from .ml import make_model
+from .preprocess import PreprocessPipeline
+from .tuner import TunedSubroutine
+
+__all__ = ["pack_state", "unpack_state", "save_subroutine",
+           "load_subroutine", "ModelRegistry"]
+
+
+def _encode(obj):
+    if isinstance(obj, np.ndarray):
+        return {"__nd__": 1, "dtype": str(obj.dtype),
+                "shape": list(obj.shape),
+                "data": obj.tobytes()}
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, (np.bool_,)):
+        return bool(obj)
+    raise TypeError(f"cannot serialise {type(obj)}")
+
+
+def _decode(obj):
+    if isinstance(obj, dict) and obj.get("__nd__") == 1:
+        return np.frombuffer(obj["data"], dtype=obj["dtype"]).reshape(
+            obj["shape"]).copy()
+    return obj
+
+
+def pack_state(state: dict) -> bytes:
+    return msgpack.packb(state, default=_encode, use_bin_type=True)
+
+
+def unpack_state(data: bytes) -> dict:
+    return msgpack.unpackb(data, object_hook=_decode, raw=False,
+                           strict_map_key=False)
+
+
+def _atomic_write(path: Path, data: bytes) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def save_subroutine(sub: TunedSubroutine, root: str | Path) -> Path:
+    path = Path(root) / f"{sub.op}_b{sub.dtype_bytes}.adsala"
+    _atomic_write(path, pack_state(sub.get_state()))
+    return path
+
+
+def load_subroutine(path: str | Path) -> TunedSubroutine:
+    state = unpack_state(Path(path).read_bytes())
+    knobs = KnobSpace(state["knobs"]["name"], state["knobs"]["candidates"])
+    # restore grid-parallelism semantics for block knob spaces
+    if knobs.name == "blocks":
+        from .knobs import _grid_parallelism
+        knobs._parallelism_fn = _grid_parallelism
+    pipeline = PreprocessPipeline()
+    pipeline.set_state(state["pipeline"])
+    model = make_model(state["model_name"])
+    model.set_state(state["model"])
+    return TunedSubroutine(
+        op=state["op"], dtype_bytes=int(state["dtype_bytes"]),
+        knob_space=knobs, pipeline=pipeline, model=model,
+        model_name=state["model_name"], log_target=bool(state["log_target"]))
+
+
+class ModelRegistry:
+    """Directory of installed subroutine artifacts."""
+
+    def __init__(self, root: str | Path) -> None:
+        self.root = Path(root)
+
+    def save(self, sub: TunedSubroutine) -> Path:
+        return save_subroutine(sub, self.root)
+
+    def load_all(self) -> list[TunedSubroutine]:
+        if not self.root.exists():
+            return []
+        return [load_subroutine(p) for p in sorted(self.root.glob("*.adsala"))]
+
+    def load_into(self, runtime) -> int:
+        subs = self.load_all()
+        for s in subs:
+            runtime.register(s)
+        return len(subs)

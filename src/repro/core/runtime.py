@@ -1,0 +1,94 @@
+"""AdsalaRuntime — the runtime library (paper Fig. 1b).
+
+Loads persisted :class:`TunedSubroutine` artifacts and, per BLAS call,
+predicts the runtime of every knob candidate and applies the argmin.  The
+paper memoizes the *last* call's dims→decision; we keep that behaviour and
+additionally offer a bounded LRU cache (beyond-paper, DESIGN.md §7.2) —
+transformer workloads emit a small set of distinct GEMM shapes, so the hit
+rate is near 1 after the first step.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+from .knobs import Knob
+from .tuner import TunedSubroutine
+
+__all__ = ["AdsalaRuntime", "RuntimeStats"]
+
+
+@dataclasses.dataclass
+class RuntimeStats:
+    calls: int = 0
+    cache_hits: int = 0
+    eval_seconds: float = 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.cache_hits / self.calls if self.calls else 0.0
+
+
+class AdsalaRuntime:
+    """Per-process decision engine for all tuned subroutines."""
+
+    def __init__(self, *, cache_size: int = 256) -> None:
+        # paper's behaviour = cache_size 1 (last call only)
+        self._subs: dict[tuple[str, int], TunedSubroutine] = {}
+        self._cache: collections.OrderedDict[tuple, Knob] = \
+            collections.OrderedDict()
+        self._cache_size = max(1, cache_size)
+        self.stats = RuntimeStats()
+
+    # -- registration --------------------------------------------------------
+    def register(self, sub: TunedSubroutine) -> None:
+        self._subs[(sub.op, sub.dtype_bytes)] = sub
+
+    def has(self, op: str, dtype_bytes: int) -> bool:
+        return (op, dtype_bytes) in self._subs
+
+    def subroutine(self, op: str, dtype_bytes: int) -> TunedSubroutine:
+        return self._subs[(op, dtype_bytes)]
+
+    # -- the runtime decision -------------------------------------------------
+    def select(self, op: str, dims: tuple[int, ...],
+               dtype_bytes: int = 4) -> Knob:
+        key = (op, dtype_bytes, tuple(int(d) for d in dims))
+        self.stats.calls += 1
+        hit = self._cache.get(key)
+        if hit is not None:
+            self.stats.cache_hits += 1
+            self._cache.move_to_end(key)
+            return hit
+        sub = self._subs[(op, dtype_bytes)]
+        t0 = time.perf_counter()
+        knob = sub.select(key[2])
+        self.stats.eval_seconds += time.perf_counter() - t0
+        self._cache[key] = knob
+        while len(self._cache) > self._cache_size:
+            self._cache.popitem(last=False)
+        return knob
+
+    def select_or_default(self, op: str, dims: tuple[int, ...],
+                          dtype_bytes: int, default: Knob) -> Knob:
+        """Graceful degradation: untuned subroutines run the default config
+        (a node that lost its model files keeps serving — fault tolerance)."""
+        if (op, dtype_bytes) in self._subs:
+            return self.select(op, dims, dtype_bytes)
+        return default
+
+    def clear_cache(self) -> None:
+        self._cache.clear()
+
+
+#: process-global runtime used by kernels.ops when none is passed explicitly
+_GLOBAL: AdsalaRuntime | None = None
+
+
+def global_runtime() -> AdsalaRuntime:
+    global _GLOBAL
+    if _GLOBAL is None:
+        _GLOBAL = AdsalaRuntime()
+    return _GLOBAL

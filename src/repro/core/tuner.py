@@ -1,0 +1,120 @@
+"""End-to-end install-time tuning pipeline for one BLAS L3 subroutine
+(paper Fig. 1a):
+
+    Halton sampling → timing sweep → Table-III features → LOF outlier removal
+    → Yeo-Johnson + standardize + corr-prune → stratified split → per-model
+    hyper-parameter tuning → estimated-speedup model selection → persist.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+from . import features as F
+from .dataset import TimingDataset, gather
+from .knobs import Knob, KnobSpace
+from .lof import remove_outliers
+from .ml import PAPER_CANDIDATES
+from .preprocess import PreprocessPipeline
+from .selection import ModelReport, evaluate_candidates, select_best
+from .split import stratified_split
+
+__all__ = ["TunedSubroutine", "install_subroutine"]
+
+
+@dataclasses.dataclass
+class TunedSubroutine:
+    """The production artifact: everything runtime needs for one subroutine."""
+    op: str
+    dtype_bytes: int
+    knob_space: KnobSpace
+    pipeline: PreprocessPipeline
+    model: object                       # fitted Estimator
+    model_name: str
+    log_target: bool
+    reports: list[ModelReport] = dataclasses.field(default_factory=list)
+    dataset: TimingDataset | None = None
+
+    # -- runtime decision --------------------------------------------------
+    def predict_times(self, dims: tuple[int, ...]) -> np.ndarray:
+        """Predicted runtime for every knob candidate at these dims."""
+        K = len(self.knob_space)
+        X = F.build_features(self.op, np.tile(np.array(dims), (K, 1)),
+                             self.knob_space.parallelism_vec(dims))
+        pred = self.model.predict(self.pipeline.transform(X))
+        return np.exp(pred) if self.log_target else pred
+
+    def select(self, dims: tuple[int, ...]) -> Knob:
+        return self.knob_space.candidates[int(np.argmin(self.predict_times(dims)))]
+
+    # -- persistence ---------------------------------------------------------
+    def get_state(self) -> dict:
+        return {
+            "op": self.op,
+            "dtype_bytes": self.dtype_bytes,
+            "knobs": self.knob_space.get_state(),
+            "pipeline": self.pipeline.get_state(),
+            "model_name": self.model_name,
+            "model": self.model.get_state(),
+            "log_target": self.log_target,
+            "reports": [r.row() for r in self.reports],
+        }
+
+
+def install_subroutine(
+    op: str,
+    knob_space: KnobSpace,
+    timer_fn: Callable[[tuple[int, ...], Knob], float],
+    *,
+    n_samples: int = 200,
+    dim_lo: int = 16,
+    dim_hi: int = 1024,
+    max_footprint_bytes: int | None = 32 * 1024 * 1024,
+    dtype_bytes: int = 4,
+    candidates: Sequence[str] = PAPER_CANDIDATES,
+    log_target: bool = True,
+    use_lof: bool = True,
+    use_yeo_johnson: bool = True,
+    tune_trials: int = 6,
+    test_frac: float = 0.15,
+    seed: int = 0,
+    dataset: TimingDataset | None = None,
+    keep_dataset: bool = True,
+    progress: Callable[[int, int], None] | None = None,
+) -> TunedSubroutine:
+    """Run the full ADSALA install for one subroutine; returns the artifact."""
+    ds = dataset if dataset is not None else gather(
+        op, knob_space, timer_fn, n_samples=n_samples, dim_lo=dim_lo,
+        dim_hi=dim_hi, max_footprint_bytes=max_footprint_bytes,
+        dtype_bytes=dtype_bytes, seed=seed, progress=progress)
+
+    # stratify samples on their best measured time so slow/fast regimes are
+    # represented in both splits (paper: stratified sampling, 15% test)
+    best_t = ds.times.min(axis=1)
+    train_s, test_s = stratified_split(np.log(np.maximum(best_t, 1e-12)),
+                                       test_frac=test_frac, seed=seed)
+
+    # LOF outlier removal on the flattened training rows (features ∪ label)
+    lof_keep = None
+    if use_lof:
+        X_all, y_all, sample_idx = ds.flatten()
+        in_train = np.isin(sample_idx, train_s)
+        y_log = np.log(np.maximum(y_all, 1e-12))
+        _, _, keep_sub = remove_outliers(X_all[in_train], y_log[in_train])
+        lof_keep = np.ones(X_all.shape[0], dtype=bool)
+        lof_keep[np.flatnonzero(in_train)] = keep_sub
+
+    pipeline = PreprocessPipeline(use_yeo_johnson=use_yeo_johnson)
+    reports = evaluate_candidates(
+        ds, pipeline, train_s, test_s, candidates=candidates,
+        log_target=log_target, tune_trials=tune_trials, seed=seed,
+        lof_keep_mask=lof_keep)
+    best = select_best(reports)
+    return TunedSubroutine(
+        op=op, dtype_bytes=dtype_bytes, knob_space=knob_space,
+        pipeline=pipeline, model=best.model, model_name=best.name,
+        log_target=log_target, reports=reports,
+        dataset=ds if keep_dataset else None)

@@ -1,0 +1,3 @@
+"""Data substrate: deterministic, shardable, resumable pipelines."""
+from .pipeline import ByteCorpusDataset, SyntheticLMDataset, make_global_batch
+__all__ = ["ByteCorpusDataset", "SyntheticLMDataset", "make_global_batch"]

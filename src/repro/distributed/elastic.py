@@ -1,0 +1,56 @@
+"""Elastic scaling: rebuild the mesh from whatever devices are alive and
+reshard state onto it.
+
+Checkpoints are mesh-agnostic (checkpoint/checkpointer.py saves gathered
+values + logical structure), so elasticity is:
+
+    mesh' = best_mesh(available_devices)
+    target' = abstract state tree with shardings from mesh'
+    state' = checkpointer.restore(step, target')
+
+``best_mesh`` picks the largest (data, model) factorisation with model ≤
+requested TP degree; ``reshard`` moves live (non-checkpoint) pytrees between
+meshes directly via device_put (for downsizing without a restart).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+__all__ = ["best_mesh", "reshard", "abstract_like"]
+
+
+def best_mesh(devices=None, *, model_parallel: int = 1,
+              axis_names=("data", "model")) -> Mesh:
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    tp = model_parallel
+    while tp > 1 and n % tp != 0:
+        tp //= 2
+    dp = n // tp
+    arr = np.array(devices[: dp * tp]).reshape(dp, tp)
+    return Mesh(arr, axis_names)
+
+
+def abstract_like(tree, mesh: Mesh, spec_fn):
+    """ShapeDtypeStruct tree with shardings on ``mesh``; ``spec_fn(path,
+    leaf) -> PartitionSpec``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        spec = spec_fn(path, leaf)
+        out.append(jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                        sharding=NamedSharding(mesh, spec)))
+    return treedef.unflatten(out)
+
+
+def reshard(tree, mesh: Mesh, spec_fn):
+    """Move a live pytree onto a (different) mesh."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        spec = spec_fn(path, leaf)
+        out.append(jax.device_put(leaf, NamedSharding(mesh, spec)))
+    return treedef.unflatten(out)

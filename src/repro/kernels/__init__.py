@@ -1,0 +1,13 @@
+"""BLAS L3 on TPU: Pallas kernels (+ BlockSpec VMEM tiling) with ADSALA
+runtime block selection, pure-jnp oracles, and the numpy blocked "black-box
+BLAS" used for wall-clock calibration on CPU hosts."""
+
+from . import ops, ref
+from .gemm import gemm_pallas
+from .symm import symm_pallas
+from .syrk import syr2k_pallas, syrk_pallas
+from .trmm import trmm_pallas
+from .trsm import trsm_pallas
+
+__all__ = ["ops", "ref", "gemm_pallas", "symm_pallas", "syrk_pallas",
+           "syr2k_pallas", "trmm_pallas", "trsm_pallas"]

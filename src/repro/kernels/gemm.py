@@ -1,0 +1,69 @@
+"""GEMM Pallas TPU kernel: C := alpha*A@B + beta*C with (bm, bk, bn) VMEM
+tiling — the op whose block config ADSALA tunes at runtime.
+
+Grid is (⌈m/bm⌉, ⌈n/bn⌉, ⌈k/bk⌉) with the contraction dim innermost and
+marked ``arbitrary`` (sequential revisits of the same output block); the two
+output dims are ``parallel``.  A float32 VMEM scratch accumulator holds the
+partial C tile across k steps so low-precision inputs (bf16) accumulate at
+full precision in the MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["gemm_pallas"]
+
+
+def _gemm_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, alpha, beta):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        out = alpha * acc_ref[...]
+        if beta != 0.0:
+            out = out + beta * c_ref[...].astype(jnp.float32)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "alpha",
+                                             "beta", "interpret"))
+def gemm_pallas(a, b, c=None, *, bm: int = 128, bk: int = 128, bn: int = 128,
+                alpha: float = 1.0, beta: float = 0.0,
+                interpret: bool = False):
+    """alpha*A@B + beta*C. Shapes must divide the block config (ops.py pads)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, \
+        f"(m,k,n)=({m},{k},{n}) not divisible by blocks ({bm},{bk},{bn})"
+    if c is None:
+        c = jnp.zeros((m, n), a.dtype)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, alpha=alpha, beta=beta),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b, c)

@@ -1,0 +1,213 @@
+"""Public BLAS L3 API with ADSALA runtime block selection.
+
+Each op:
+  1. asks the :class:`~repro.core.runtime.AdsalaRuntime` (if provided or
+     globally installed) for the argmin-predicted block config at the call's
+     dims — at *trace* time, so the decision costs nothing per executed step
+     and is memoized across identical shapes (paper Fig. 1b);
+  2. zero-pads operands to block multiples (identity-pads the TRSM diagonal);
+  3. dispatches to the Pallas kernel; slices the result back.
+
+The knob spaces used by install-time calibration live here too, so the tuner
+and the executor can never disagree about the candidate set.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.knobs import Knob, KnobSpace, block_knob_space
+from repro.core.runtime import AdsalaRuntime, global_runtime
+
+from .gemm import gemm_pallas
+from .symm import symm_pallas
+from .syrk import syr2k_pallas, syrk_pallas
+from .trmm import trmm_pallas
+from .trsm import trsm_pallas
+
+__all__ = [
+    "gemm", "symm", "syrk", "syr2k", "trmm", "trsm",
+    "knob_space_for", "default_knob", "dims_of", "run_op", "DTYPE_BYTES",
+]
+
+
+def DTYPE_BYTES(dtype) -> int:
+    return int(jnp.dtype(dtype).itemsize)
+
+
+# ---------------------------------------------------------------------------
+# knob spaces (shared between calibration and execution)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def knob_space_for(op: str, *, small: bool = False,
+                   sizes: tuple[int, ...] | None = None) -> KnobSpace:
+    """Candidate block configs per subroutine.
+
+    GEMM tunes (bm, bk, bn); the 2-dim subroutines tune (bm, bn) with the
+    A-dimension block tied to bm (square A tiles), plus the 'full'/'tri'
+    kernel variant for the triangular/symmetric-output ops.
+
+    ``sizes`` overrides the block-edge candidates: TPU targets default to
+    MXU-aligned (128, 256, 512); CPU-host calibration passes cache-scale
+    edges (e.g. 64, 128, 256).
+    """
+    if sizes is None:
+        sizes = (128, 256) if small else (128, 256, 512)
+    if op == "gemm":
+        return block_knob_space(bms=sizes, bks=sizes, bns=sizes)
+    variants = ("full", "tri") if op in ("syrk", "syr2k", "trmm") else ("full",)
+    space = block_knob_space(bms=sizes, bks=(128,), bns=sizes,
+                             variants=variants)
+    # collapse bk (unused for 2-dim ops) out of the candidate identity
+    seen, cands = set(), []
+    for k in space:
+        d = k.dict
+        key = (d["bm"], d["bn"], d["variant"])
+        if key not in seen:
+            seen.add(key)
+            cands.append({"bm": d["bm"], "bk": d["bm"], "bn": d["bn"],
+                          "variant": d["variant"]})
+    from repro.core.knobs import _grid_parallelism
+    return KnobSpace("blocks", cands, parallelism_fn=_grid_parallelism)
+
+
+def default_knob(op: str) -> Knob:
+    """Baseline config (paper: max threads) = maximum grid parallelism =
+    smallest blocks."""
+    space = knob_space_for(op)
+    return space.candidates[int(np.argmax(
+        [space.parallelism(c, (4096, 4096, 4096)[: 3 if op == "gemm" else 2])
+         for c in space.candidates]))]
+
+
+def dims_of(op: str, shapes: tuple[tuple[int, ...], ...]) -> tuple[int, ...]:
+    """The subroutine's free dims (paper Table I) from operand shapes."""
+    if op == "gemm":
+        (m, k), (_, n) = shapes[0], shapes[1]
+        return (m, k, n)
+    if op == "symm":
+        (m, _), (_, n) = shapes[0], shapes[1]
+        return (m, n)
+    if op in ("syrk", "syr2k"):
+        (n, k) = shapes[0]
+        return (n, k)
+    (m, _), (_, n) = shapes[0], shapes[1]   # trmm/trsm
+    return (m, n)
+
+
+def _select(op: str, dims: tuple[int, ...], dtype,
+            knob: Optional[Knob], runtime: Optional[AdsalaRuntime]) -> Knob:
+    if knob is not None:
+        return knob
+    rt = runtime if runtime is not None else global_runtime()
+    return rt.select_or_default(op, dims, DTYPE_BYTES(dtype),
+                                default_knob(op))
+
+
+def _pad_to(x, rows: int, cols: int):
+    m, n = x.shape
+    if m == rows and n == cols:
+        return x
+    return jnp.pad(x, ((0, rows - m), (0, cols - n)))
+
+
+def _rup(v: int, b: int) -> int:
+    return ((v + b - 1) // b) * b
+
+
+# ---------------------------------------------------------------------------
+# public ops
+# ---------------------------------------------------------------------------
+
+def gemm(a, b, c=None, *, alpha=1.0, beta=0.0, knob=None, runtime=None,
+         interpret: bool = False):
+    m, k = a.shape
+    _, n = b.shape
+    kb = _select("gemm", (m, k, n), a.dtype, knob, runtime).dict
+    bm, bk, bn = (min(kb["bm"], _rup(m, 128)), min(kb["bk"], _rup(k, 128)),
+                  min(kb["bn"], _rup(n, 128)))
+    M, K, N = _rup(m, bm), _rup(k, bk), _rup(n, bn)
+    cp = _pad_to(c, M, N) if c is not None else None
+    out = gemm_pallas(_pad_to(a, M, K), _pad_to(b, K, N), cp,
+                      bm=bm, bk=bk, bn=bn, alpha=alpha, beta=beta,
+                      interpret=interpret)
+    return out[:m, :n]
+
+
+def symm(a, b, c=None, *, alpha=1.0, beta=0.0, knob=None, runtime=None,
+         interpret: bool = False):
+    m, n = a.shape[0], b.shape[1]
+    kb = _select("symm", (m, n), a.dtype, knob, runtime).dict
+    bm, bn = min(kb["bm"], _rup(m, 128)), min(kb["bn"], _rup(n, 128))
+    M, N = _rup(m, bm), _rup(n, bn)
+    cp = _pad_to(c, M, N) if c is not None else None
+    out = symm_pallas(_pad_to(a, M, M), _pad_to(b, M, N), cp,
+                      bm=bm, bn=bn, alpha=alpha, beta=beta,
+                      interpret=interpret)
+    return out[:m, :n]
+
+
+def syrk(a, c=None, *, alpha=1.0, beta=0.0, knob=None, runtime=None,
+         interpret: bool = False):
+    n, k = a.shape
+    kb = _select("syrk", (n, k), a.dtype, knob, runtime).dict
+    bm, bk = min(kb["bm"], _rup(n, 128)), min(kb["bn"], _rup(k, 128))
+    N, K = _rup(n, bm), _rup(k, bk)
+    cp = _pad_to(c, N, N) if c is not None else None
+    out = syrk_pallas(_pad_to(a, N, K), cp, bm=bm, bk=bk, alpha=alpha,
+                      beta=beta, variant=kb.get("variant", "full"),
+                      interpret=interpret)
+    return out[:n, :n]
+
+
+def syr2k(a, b, c=None, *, alpha=1.0, beta=0.0, knob=None, runtime=None,
+          interpret: bool = False):
+    n, k = a.shape
+    kb = _select("syr2k", (n, k), a.dtype, knob, runtime).dict
+    bm, bk = min(kb["bm"], _rup(n, 128)), min(kb["bn"], _rup(k, 128))
+    N, K = _rup(n, bm), _rup(k, bk)
+    cp = _pad_to(c, N, N) if c is not None else None
+    out = syr2k_pallas(_pad_to(a, N, K), _pad_to(b, N, K), cp, bm=bm, bk=bk,
+                       alpha=alpha, beta=beta,
+                       variant=kb.get("variant", "full"), interpret=interpret)
+    return out[:n, :n]
+
+
+def trmm(a, b, *, alpha=1.0, knob=None, runtime=None,
+         interpret: bool = False):
+    m, n = a.shape[0], b.shape[1]
+    kb = _select("trmm", (m, n), a.dtype, knob, runtime).dict
+    bm, bn = min(kb["bm"], _rup(m, 128)), min(kb["bn"], _rup(n, 128))
+    M, N = _rup(m, bm), _rup(n, bn)
+    out = trmm_pallas(_pad_to(a, M, M), _pad_to(b, M, N), bm=bm, bn=bn,
+                      alpha=alpha, variant=kb.get("variant", "full"),
+                      interpret=interpret)
+    return out[:m, :n]
+
+
+def trsm(a, b, *, alpha=1.0, knob=None, runtime=None,
+         interpret: bool = False):
+    m, n = a.shape[0], b.shape[1]
+    kb = _select("trsm", (m, n), a.dtype, knob, runtime).dict
+    bm, bn = min(kb["bm"], _rup(m, 128)), min(kb["bn"], _rup(n, 128))
+    M, N = _rup(m, bm), _rup(n, bn)
+    ap = _pad_to(a, M, M)
+    if M > m:  # identity-pad the diagonal so padded solves stay well-posed
+        pad_eye = jnp.eye(M, dtype=a.dtype).at[:m, :m].set(0)
+        ap = ap + pad_eye
+    out = trsm_pallas(ap, _pad_to(b, M, N), bm=bm, bn=bn, alpha=alpha,
+                      interpret=interpret)
+    return out[:m, :n]
+
+
+_OPS = {"gemm": gemm, "symm": symm, "syrk": syrk, "syr2k": syr2k,
+        "trmm": trmm, "trsm": trsm}
+
+
+def run_op(op: str, operands: tuple, **kw):
+    return _OPS[op](*operands, **kw)

@@ -1,0 +1,147 @@
+"""SYRK / SYR2K Pallas TPU kernels (lower-triangle rank-k updates).
+
+  syrk : C := alpha*A@A^T + beta*C          A(n,k), C(n,n)
+  syr2k: C := alpha*(A@B^T + B@A^T) + beta*C
+
+Two kernel variants, selectable by the ADSALA knob (DESIGN.md §7.4):
+
+  'full' — every (i, j) output block is computed (both triangles): simple,
+           maximally parallel grid, 2× the minimal FLOPs.
+  'tri'  — blocks strictly above the diagonal skip the MXU work
+           (``pl.when(j <= i)``) and emit zeros; the caller mirrors the lower
+           triangle afterwards.  ~half the FLOPs, but the skipped cells still
+           pay grid/DMA overhead — which of the two wins is shape- and
+           hardware-dependent, exactly the trade-off the ML model learns.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["syrk_pallas", "syr2k_pallas"]
+
+
+def _syrk_kernel(a_i_ref, a_j_ref, c_ref, o_ref, acc_ref, *,
+                 alpha, beta, tri):
+    i, j, l = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    compute = (j <= i) if tri else (j == j)  # tri: skip upper blocks
+
+    @pl.when(compute)
+    def _acc():
+        acc_ref[...] += jnp.dot(a_i_ref[...], a_j_ref[...].T,
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(l == pl.num_programs(2) - 1)
+    def _flush():
+        out = alpha * acc_ref[...]
+        if beta != 0.0:
+            out = out + beta * c_ref[...].astype(jnp.float32)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _syr2k_kernel(a_i_ref, b_j_ref, b_i_ref, a_j_ref, c_ref, o_ref, acc_ref,
+                  *, alpha, beta, tri):
+    i, j, l = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    compute = (j <= i) if tri else (j == j)
+
+    @pl.when(compute)
+    def _acc():
+        acc_ref[...] += jnp.dot(a_i_ref[...], b_j_ref[...].T,
+                                preferred_element_type=jnp.float32)
+        acc_ref[...] += jnp.dot(b_i_ref[...], a_j_ref[...].T,
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(l == pl.num_programs(2) - 1)
+    def _flush():
+        out = alpha * acc_ref[...]
+        if beta != 0.0:
+            out = out + beta * c_ref[...].astype(jnp.float32)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _mirror_lower(x):
+    return jnp.tril(x) + jnp.tril(x, -1).T
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "alpha", "beta",
+                                             "variant", "interpret"))
+def syrk_pallas(a, c=None, *, bm: int = 128, bk: int = 128,
+                alpha: float = 1.0, beta: float = 0.0,
+                variant: str = "full", interpret: bool = False):
+    n, k = a.shape
+    assert n % bm == 0 and k % bk == 0
+    if c is None:
+        c = jnp.zeros((n, n), a.dtype)
+    if variant == "tri":
+        c = jnp.tril(c)  # upper blocks emit beta*0; mirrored afterwards
+    grid = (n // bm, n // bm, k // bk)
+    out = pl.pallas_call(
+        functools.partial(_syrk_kernel, alpha=alpha, beta=beta,
+                          tri=(variant == "tri")),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),   # A[i,l]
+            pl.BlockSpec((bm, bk), lambda i, j, l: (j, l)),   # A[j,l]
+            pl.BlockSpec((bm, bm), lambda i, j, l: (i, j)),   # C[i,j]
+        ],
+        out_specs=pl.BlockSpec((bm, bm), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bm), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, a, c)
+    if variant == "tri":
+        out = _mirror_lower(out)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "alpha", "beta",
+                                             "variant", "interpret"))
+def syr2k_pallas(a, b, c=None, *, bm: int = 128, bk: int = 128,
+                 alpha: float = 1.0, beta: float = 0.0,
+                 variant: str = "full", interpret: bool = False):
+    n, k = a.shape
+    assert a.shape == b.shape
+    assert n % bm == 0 and k % bk == 0
+    if c is None:
+        c = jnp.zeros((n, n), a.dtype)
+    if variant == "tri":
+        c = jnp.tril(c)
+    grid = (n // bm, n // bm, k // bk)
+    out = pl.pallas_call(
+        functools.partial(_syr2k_kernel, alpha=alpha, beta=beta,
+                          tri=(variant == "tri")),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),   # A[i,l]
+            pl.BlockSpec((bm, bk), lambda i, j, l: (j, l)),   # B[j,l]
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),   # B[i,l]
+            pl.BlockSpec((bm, bk), lambda i, j, l: (j, l)),   # A[j,l]
+            pl.BlockSpec((bm, bm), lambda i, j, l: (i, j)),   # C[i,j]
+        ],
+        out_specs=pl.BlockSpec((bm, bm), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bm), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b, b, a, c)
+    if variant == "tri":
+        out = _mirror_lower(out)
+    return out

@@ -1,0 +1,73 @@
+"""TRMM Pallas TPU kernel: B := alpha * tril(A) @ B (left, lower, non-unit).
+
+The contraction over l only references A's lower triangle, so block rows
+truncate at the diagonal:
+
+    l < i : dense block A[i,l]
+    l = i : diagonal block, masked to its lower triangle in-kernel
+    l > i : structurally zero
+
+'tri' variant skips l > i MXU work with ``pl.when`` (≈½ FLOPs, same output);
+'full' multiplies by an explicitly zeroed tile (uniform pipeline, no branch
+divergence).  Which wins depends on the (m, n) shape — the ADSALA model's
+job to learn.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["trmm_pallas"]
+
+
+def _trmm_kernel(a_ref, b_ref, o_ref, acc_ref, *, alpha, tri):
+    i, l = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    compute = (l <= i) if tri else (l == l)
+
+    @pl.when(compute)
+    def _acc():
+        a = a_ref[...]
+        a = jnp.where(l < i, a, jnp.where(l == i, jnp.tril(a),
+                                          jnp.zeros_like(a)))
+        acc_ref[...] += jnp.dot(a, b_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(l == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = (alpha * acc_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "alpha", "variant",
+                                             "interpret"))
+def trmm_pallas(a, b, *, bm: int = 128, bn: int = 128, alpha: float = 1.0,
+                variant: str = "full", interpret: bool = False):
+    m, m2 = a.shape
+    mb, n = b.shape
+    assert m == m2 == mb
+    assert m % bm == 0 and n % bn == 0
+    grid = (m // bm, n // bn, m // bm)
+    return pl.pallas_call(
+        functools.partial(_trmm_kernel, alpha=alpha,
+                          tri=(variant == "tri")),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bm), lambda i, j, l: (i, l)),   # A[i,l]
+            pl.BlockSpec((bm, bn), lambda i, j, l: (l, j)),   # B[l,j]
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)

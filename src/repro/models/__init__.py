@@ -1,0 +1,14 @@
+"""Architecture zoo: 10 assigned architectures assembled from shared layers
+(configs select via --arch).  Public API: init_params / forward / loss_fn /
+init_decode_state / prefill / decode_step."""
+
+from .transformer import (decode_step, forward, init_decode_state,
+                          init_params, loss_fn, param_count, prefill)
+from .sharding import (DEFAULT_RULES, MULTIPOD_RULES, ShardingRules,
+                       constrain, logical_spec)
+from .layers import Ctx, cross_entropy, flash_attention
+
+__all__ = ["decode_step", "forward", "init_decode_state", "init_params",
+           "loss_fn", "param_count", "prefill", "DEFAULT_RULES",
+           "MULTIPOD_RULES", "ShardingRules", "constrain", "logical_spec",
+           "Ctx", "cross_entropy", "flash_attention"]

@@ -1,0 +1,195 @@
+"""Mamba2 (SSD) mixer — chunked state-space dual form.
+
+Sequence mixing is the scalar-decay SSD recurrence
+
+    h_t = exp(dt_t·A) · h_{t-1} + dt_t · B_t ⊗ x_t        h: (H, P, N)
+    y_t = C_t · h_t + D ⊙ x_t
+
+computed in chunks of ``cfg.ssm_chunk``: within a chunk the recurrence is a
+masked (L × L) decay-weighted attention-like matmul (MXU work); across
+chunks a ``lax.scan`` carries the (B, H, P, N) state.  All per-chunk
+tensors live inside the scan body, so peak memory is O(B·L·L·H) per chunk,
+not O(S²).  Decode is the recurrence applied to a single token — O(1) state,
+which is why the hybrid/SSM archs own the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import Ctx, init_linear, init_norm, linear, rmsnorm
+
+__all__ = ["init_mamba2", "mamba2_mixer", "init_mamba2_state"]
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_headdim
+    conv_dim = d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba2(key, cfg: ModelConfig) -> dict:
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_inner + 2 * cfg.ssm_groups * cfg.ssm_state + n_heads
+    return {
+        "in_proj": init_linear(ks[0], cfg.d_model, proj_out,
+                               dtype=cfg.param_dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_dim))
+                   * 0.1).astype(cfg.param_dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.param_dtype),
+        "A_log": jnp.zeros((n_heads,), cfg.param_dtype),
+        "D": jnp.ones((n_heads,), cfg.param_dtype),
+        "dt_bias": jnp.zeros((n_heads,), cfg.param_dtype),
+        "norm": init_norm(d_inner, cfg.param_dtype),
+        "out_proj": init_linear(ks[2], d_inner, cfg.d_model,
+                                dtype=cfg.param_dtype),
+    }
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int, dtype):
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, n_heads, cfg.ssm_headdim, cfg.ssm_state),
+                         jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+    }
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv (width W) via shifted adds."""
+    W = w.shape[0]
+    out = xBC * w[W - 1]
+    for i in range(1, W):
+        shifted = jnp.pad(xBC, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[W - 1 - i]
+    return out + b
+
+
+def _split(cfg, zxbcdt):
+    d_inner, n_heads, _ = _dims(cfg)
+    gn = cfg.ssm_groups * cfg.ssm_state
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner: 2 * d_inner + 2 * gn]
+    dt = zxbcdt[..., 2 * d_inner + 2 * gn:]
+    return z, xBC, dt
+
+
+def _ssd_chunked(x, dt, A, B_in, C_in, cfg, h0, ctx=None, *, unroll=False):
+    """x:(B,S,H,P) dt:(B,S,H) A:(H,) B_in/C_in:(B,S,G,N) → y, h_final."""
+    Bsz, S, H, P = x.shape
+    N, G, L = cfg.ssm_state, cfg.ssm_groups, min(cfg.ssm_chunk, S)
+    nc = -(-S // L)
+    pad = nc * L - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_in = jnp.pad(B_in, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_in = jnp.pad(C_in, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    rep = H // G
+    to_heads = lambda t: jnp.repeat(t, rep, axis=2)           # (B,S,H,N)
+    Bh, Ch = to_heads(B_in), to_heads(C_in)
+    if ctx is not None:   # head-parallel layout for the SSD region
+        x = ctx.cons(x, "batch", None, "heads", None)
+        Bh = ctx.cons(Bh, "batch", None, "heads", None)
+        Ch = ctx.cons(Ch, "batch", None, "heads", None)
+
+    # chunked xs for the scan: leading axis nc
+    csplit = lambda t: t.reshape(Bsz, nc, L, *t.shape[2:]).swapaxes(0, 1)
+    xs = (csplit(x), csplit(dt), csplit(Bh), csplit(Ch))
+
+    def chunk_step(h, inp):
+        xc, dtc, Bc, Cc = inp                                  # (B,L,H,*)
+        lA = (dtc * A).astype(jnp.float32)                     # ≤ 0
+        cum = jnp.cumsum(lA, axis=1)                           # (B,L,H)
+        cum_cl = jnp.maximum(cum, -30.0)
+        # intra-chunk: scores[t,s] = (C_t·B_s)·exp(cum_t−cum_s)·dt_s, s ≤ t
+        cb = jnp.einsum("blhn,bshn->blsh", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))
+        decay = jnp.exp(cum[:, :, None, :] - cum_cl[:, None, :, :])
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        scores = jnp.where(mask[None, :, :, None], cb * decay, 0.0)
+        scores = scores * dtc.astype(jnp.float32)[:, None, :, :]
+        y_intra = jnp.einsum("blsh,bshp->blhp", scores,
+                             xc.astype(jnp.float32))
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("blhn,bhpn->blhp",
+                             Cc.astype(jnp.float32) *
+                             jnp.exp(cum)[..., None], h)
+        # state update
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum_cl)        # (B,L,H)
+        dBx = jnp.einsum("blh,blhn,blhp->bhpn",
+                         (dtc.astype(jnp.float32) * decay_to_end),
+                         Bc.astype(jnp.float32), xc.astype(jnp.float32))
+        h_new = h * jnp.exp(cum[:, -1, :])[:, :, None, None] + dBx
+        if ctx is not None:   # keep the carried state head-sharded: the
+            # backward scan stacks one carry per chunk (B,H,P,N)
+            h_new = ctx.cons(h_new, "batch", "heads", None, None)
+        return h_new, (y_intra + y_inter)
+
+    # checkpoint: intra-chunk scores are recomputed in backward instead of
+    # being stacked across chunks (and across scanned layers) — same memory
+    # contract as the flash kv step
+    h_final, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0, xs,
+                               unroll=min(unroll, nc))
+    y = ys.swapaxes(0, 1).reshape(Bsz, nc * L, H, P)[:, :S]
+    return y, h_final
+
+
+def mamba2_mixer(p: dict, x, ctx: Ctx, *, state: dict | None = None):
+    """x: (B,S,D) → (y (B,S,D), new_state|None)."""
+    cfg = ctx.cfg
+    Bsz, S, _ = x.shape
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    N, G, P = cfg.ssm_state, cfg.ssm_groups, cfg.ssm_headdim
+
+    zxbcdt = linear(p["in_proj"], x, ctx, out_logical="ssm_inner")
+    z, xBC, dt = _split(cfg, zxbcdt)
+
+    new_state = None
+    if state is None:
+        xBC = _causal_conv(xBC, ctx.cast(p["conv_w"]), ctx.cast(p["conv_b"]))
+    else:
+        hist = jnp.concatenate([state["conv"].astype(xBC.dtype), xBC], axis=1)
+        xBC_full = _causal_conv(hist, ctx.cast(p["conv_w"]),
+                                ctx.cast(p["conv_b"]))
+        xBC = xBC_full[:, -S:]
+        new_conv = hist[:, -(cfg.conv_width - 1):]
+    xBC = jax.nn.silu(xBC)
+
+    x_ssm = xBC[..., :d_inner].reshape(Bsz, S, n_heads, P)
+    B_in = xBC[..., d_inner: d_inner + G * N].reshape(Bsz, S, G, N)
+    C_in = xBC[..., d_inner + G * N:].reshape(Bsz, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # (H,) < 0
+
+    h0 = (state["ssm"] if state is not None else
+          jnp.zeros((Bsz, n_heads, P, N), jnp.float32))
+    if state is not None and S == 1:
+        # pure decode recurrence (no chunk machinery)
+        dA = jnp.exp(dt[:, 0] * A)                           # (B,H)
+        Bh = jnp.repeat(B_in[:, 0], n_heads // G, axis=1)    # (B,H,N)
+        Ch = jnp.repeat(C_in[:, 0], n_heads // G, axis=1)
+        dBx = jnp.einsum("bh,bhn,bhp->bhpn", dt[:, 0],
+                         Bh.astype(jnp.float32),
+                         x_ssm[:, 0].astype(jnp.float32))
+        h = h0 * dA[:, :, None, None] + dBx
+        y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(jnp.float32), h)
+        y = y[:, None]                                       # (B,1,H,P)
+        new_state = {"ssm": h, "conv": new_conv}
+    else:
+        y, h = _ssd_chunked(x_ssm, dt, A, B_in, C_in, cfg, h0, ctx,
+                            unroll=cfg.unroll_ssm)
+        if state is not None:
+            new_state = {"ssm": h, "conv": new_conv}
+
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * \
+        x_ssm.astype(jnp.float32)
+    y = y.reshape(Bsz, S, d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    y = linear(p["out_proj"], y, ctx, out_logical="embed")
+    return y, new_state

@@ -1,0 +1,219 @@
+"""RWKV6 "Finch" — attention-free token mixing with data-dependent decay.
+
+Time-mix recurrence (per head, K = V = head_dim):
+
+    S_t = diag(w_t) · S_{t-1} + k_tᵀ v_t          S: (K, V)
+    y_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+
+with per-channel, per-token decay w_t = exp(−exp(w0 + lora(x_t))) ∈ (0,1)
+(the Finch novelty) and data-dependent token-shift lerps.  Computed in
+chunks: within a chunk the recurrence becomes a decay-weighted (L × L)
+score matmul via the exp-difference factorisation
+
+    exp(cum_{t−1} − cum_s) = (r_t ⊙ e^{cum_{t−1}}) · (k_s ⊙ e^{−cum_s})
+
+with cum clamped at −30 for f32 safety (contributions below e^{−30} are
+dead); across chunks a ``lax.scan`` carries (B, H, K, V) state.  Decode is
+the one-token recurrence — O(1) state → owns ``long_500k``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import Ctx, init_linear, linear
+
+__all__ = ["init_rwkv6", "rwkv6_block", "init_rwkv6_state"]
+
+_MIX = ("r", "k", "v", "g", "w")
+
+
+def _heads(cfg: ModelConfig):
+    K = cfg.rwkv_head_dim
+    return cfg.d_model // K, K
+
+
+def init_rwkv6(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H, K = _heads(cfg)
+    L = cfg.rwkv_lora
+    ks = jax.random.split(key, 16)
+    from .layers import init_norm
+    p = {
+        # pre-norms (RWKV blocks own their residual structure)
+        "ln1": init_norm(d, cfg.param_dtype),
+        "ln2": init_norm(d, cfg.param_dtype),
+        # time-mix
+        "mu_x": jnp.full((d,), 0.5, cfg.param_dtype),
+        "mu": jnp.full((5, d), 0.5, cfg.param_dtype),
+        "lora_A": (jax.random.normal(ks[0], (d, 5 * L)) * 0.01
+                   ).astype(cfg.param_dtype),
+        "lora_B": (jax.random.normal(ks[1], (5, L, d)) * 0.01
+                   ).astype(cfg.param_dtype),
+        "w0": jnp.full((d,), -1.0, cfg.param_dtype),
+        "w_lora_A": (jax.random.normal(ks[2], (d, L)) * 0.01
+                     ).astype(cfg.param_dtype),
+        "w_lora_B": (jax.random.normal(ks[3], (L, d)) * 0.01
+                     ).astype(cfg.param_dtype),
+        "wr": init_linear(ks[4], d, d, dtype=cfg.param_dtype),
+        "wk": init_linear(ks[5], d, d, dtype=cfg.param_dtype),
+        "wv": init_linear(ks[6], d, d, dtype=cfg.param_dtype),
+        "wg": init_linear(ks[7], d, d, dtype=cfg.param_dtype),
+        "u": (jax.random.normal(ks[8], (H, K)) * 0.1).astype(cfg.param_dtype),
+        "ln_scale": jnp.ones((H, K), cfg.param_dtype),
+        "ln_bias": jnp.zeros((H, K), cfg.param_dtype),
+        "wo": init_linear(ks[9], d, d, dtype=cfg.param_dtype),
+        # channel-mix
+        "cm_mu_k": jnp.full((d,), 0.5, cfg.param_dtype),
+        "cm_mu_r": jnp.full((d,), 0.5, cfg.param_dtype),
+        "cm_wk": init_linear(ks[10], d, cfg.d_ff, dtype=cfg.param_dtype),
+        "cm_wv": init_linear(ks[11], cfg.d_ff, d, dtype=cfg.param_dtype),
+        "cm_wr": init_linear(ks[12], d, d, dtype=cfg.param_dtype),
+    }
+    return p
+
+
+def init_rwkv6_state(cfg: ModelConfig, batch: int, dtype):
+    H, K = _heads(cfg)
+    return {
+        "tm_prev": jnp.zeros((batch, cfg.d_model), dtype),
+        "cm_prev": jnp.zeros((batch, cfg.d_model), dtype),
+        "S": jnp.zeros((batch, H, K, K), jnp.float32),
+    }
+
+
+def _shift(x, prev):
+    """x_{t-1} along seq; position 0 takes ``prev`` (decode carry)."""
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if prev is not None:
+        shifted = shifted.at[:, 0].set(prev.astype(x.dtype))
+    return shifted
+
+
+def _wkv_chunked(r, k, v, w_log, u, chunk, S0, ctx=None, *, unroll=False):
+    """r,k,v: (B,T,H,K); w_log: (B,T,H,K) = log w ≤ 0; u: (H,K).
+    Returns (y (B,T,H,K), S_final (B,H,K,K))."""
+    B, T, H, K = r.shape
+    L = min(chunk, T)
+    nc = -(-T // L)
+    pad = nc * L - T
+    if pad:
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        w_log = jnp.pad(w_log, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    csplit = lambda t: t.reshape(B, nc, L, H, K).swapaxes(0, 1)
+    xs = (csplit(r.astype(jnp.float32)), csplit(k.astype(jnp.float32)),
+          csplit(v.astype(jnp.float32)), csplit(w_log.astype(jnp.float32)))
+
+    mask_strict = jnp.tril(jnp.ones((L, L), bool), -1)
+
+    def chunk_step(S, inp):
+        rc, kc, vc, lw = inp                                   # (B,L,H,K)
+        cum = jnp.cumsum(lw, axis=1)                           # ≤ 0
+        cum_cl = jnp.maximum(cum, -30.0)
+        cum_prev = jnp.pad(cum, ((0, 0), (1, 0), (0, 0), (0, 0)))[:, :-1]
+        r_sc = rc * jnp.exp(cum_prev)                          # safe: ≤ rc
+        k_sc = kc * jnp.exp(-cum_cl)                           # ≤ e^30
+        scores = jnp.einsum("blhk,bshk->bhls", r_sc, k_sc)
+        scores = jnp.where(mask_strict[None, None], scores, 0.0)
+        y = jnp.einsum("bhls,bshk->blhk", scores, vc)
+        # current-token bonus
+        bonus = jnp.einsum("blhk,blhk->blh", rc, u[None, None] * kc)
+        y = y + bonus[..., None] * vc
+        # carried state
+        y = y + jnp.einsum("blhk,bhkv->blhv", r_sc, S)
+        # state update
+        k_end = kc * jnp.exp(cum[:, -1:, :, :] - cum_cl)
+        S_new = S * jnp.exp(cum[:, -1])[..., None] + \
+            jnp.einsum("bshk,bshv->bhkv", k_end, vc)
+        if ctx is not None:
+            S_new = ctx.cons(S_new, "batch", "heads", None, None)
+        return S_new, y
+
+    S_final, ys = jax.lax.scan(jax.checkpoint(chunk_step), S0, xs,
+                               unroll=min(unroll, nc))
+    y = ys.swapaxes(0, 1).reshape(B, nc * L, H, K)[:, :T]
+    return y, S_final
+
+
+def rwkv6_block(p: dict, x, ctx: Ctx, *, state: dict | None = None):
+    """Full RWKV6 layer (time-mix + channel-mix), pre-LN residual style.
+    x: (B,S,D) → (y, new_state|None)."""
+    cfg = ctx.cfg
+    B, S, D = x.shape
+    H, K = _heads(cfg)
+    from .layers import rmsnorm
+
+    x_res = x
+    x = rmsnorm(p["ln1"], x)
+
+    # ---------------- time mix ----------------
+    prev = state["tm_prev"] if state is not None else None
+    x_prev = _shift(x, prev)
+    dx = x_prev - x
+    mu_x = ctx.cast(p["mu_x"])
+    xx = x + dx * mu_x
+    lora = jnp.tanh(xx @ ctx.cast(p["lora_A"])).reshape(B, S, 5, -1)
+    dd = jnp.einsum("bsfl,fld->bsfd", lora, ctx.cast(p["lora_B"]))
+    mixed = x[:, :, None] + dx[:, :, None] * (ctx.cast(p["mu"])[None, None]
+                                              + dd)           # (B,S,5,D)
+    xr, xk, xv, xg, xw = [mixed[:, :, i] for i in range(5)]
+
+    r = ctx.cons(linear(p["wr"], xr, ctx).reshape(B, S, H, K),
+                 "batch", None, "heads", None)
+    k = ctx.cons(linear(p["wk"], xk, ctx).reshape(B, S, H, K),
+                 "batch", None, "heads", None)
+    v = ctx.cons(linear(p["wv"], xv, ctx).reshape(B, S, H, K),
+                 "batch", None, "heads", None)
+    g = linear(p["wg"], xg, ctx)
+    w_log = -jnp.exp(p["w0"].astype(jnp.float32) +
+                     (jnp.tanh(xw @ ctx.cast(p["w_lora_A"])) @
+                      ctx.cast(p["w_lora_B"])).astype(jnp.float32))
+    w_log = w_log.reshape(B, S, H, K)
+
+    S0 = (state["S"] if state is not None
+          else jnp.zeros((B, H, K, K), jnp.float32))
+    if state is not None and S == 1:
+        # one-token recurrence
+        rt, kt, vt = (t[:, 0].astype(jnp.float32) for t in (r, k, v))
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S0) + \
+            jnp.einsum("bhk,bhk,bhv->bhv", rt,
+                       p["u"].astype(jnp.float32)[None] * kt, vt)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        S_new = S0 * jnp.exp(w_log[:, 0])[..., None] + kv
+        y = y[:, None]                                        # (B,1,H,K)
+    else:
+        y, S_new = _wkv_chunked(r, k, v, w_log, p["u"].astype(jnp.float32),
+                                cfg.rwkv_chunk, S0, ctx,
+                                unroll=cfg.unroll_ssm)
+
+    # per-head group-norm, gate, output proj
+    mean = y.mean(-1, keepdims=True)
+    var = y.var(-1)[..., None]
+    y = (y - mean) * jax.lax.rsqrt(var + 1e-5)
+    y = y * p["ln_scale"].astype(jnp.float32)[None, None] + \
+        p["ln_bias"].astype(jnp.float32)[None, None]
+    y = y.reshape(B, S, D).astype(x.dtype) * jax.nn.silu(g)
+    tm_out = linear(p["wo"], y, ctx, out_logical="embed")
+
+    h_res = x_res + tm_out
+    h = rmsnorm(p["ln2"], h_res)
+
+    # ---------------- channel mix ----------------
+    prev_cm = state["cm_prev"] if state is not None else None
+    h_prev = _shift(h, prev_cm)
+    dh = h_prev - h
+    hk = h + dh * ctx.cast(p["cm_mu_k"])
+    hr = h + dh * ctx.cast(p["cm_mu_r"])
+    kk = jnp.square(jax.nn.relu(linear(p["cm_wk"], hk, ctx,
+                                       out_logical="mlp")))
+    cm_out = jax.nn.sigmoid(linear(p["cm_wr"], hr, ctx)) * \
+        linear(p["cm_wv"], kk, ctx, out_logical="embed")
+    out = h_res + cm_out
+
+    new_state = None
+    if state is not None:
+        new_state = {"tm_prev": x[:, -1], "cm_prev": h[:, -1], "S": S_new}
+    return out, new_state

@@ -1,0 +1,5 @@
+"""Roofline analysis: HLO collective parsing + three-term roofline."""
+from .analysis import HW, RooflineReport, model_flops, roofline
+from .hlo_parse import COLLECTIVE_KINDS, parse_collectives, wire_bytes
+__all__ = ["HW", "RooflineReport", "model_flops", "roofline",
+           "COLLECTIVE_KINDS", "parse_collectives", "wire_bytes"]

@@ -1,0 +1,73 @@
+"""Three-term roofline from a compiled dry-run artifact (DESIGN.md §6).
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_operand_bytes / (chips × link_bw × links)
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.  ``model_flops`` = 6·N·D (dense) or 6·N_active·D (MoE)
+for train; 2·N(_active)·D for inference — the MODEL_FLOPS/HLO_FLOPs ratio
+flags remat/redundant compute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["HW", "RooflineReport", "roofline", "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12        # bf16 / chip
+    hbm_bw: float = 819e9             # B/s / chip
+    ici_bw: float = 50e9              # B/s / link
+    ici_links: int = 4                # 2D-torus links per chip (v5e: 4)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops_: float
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg, shape, active_params: int) -> float:
+    """6·N·D for train, 2·N·D for inference steps (D = processed tokens)."""
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * active_params * tokens
+
+
+def roofline(*, arch: str, shape: str, mesh: str, chips: int,
+             hlo_flops: float, hlo_bytes: float, collective_bytes: float,
+             model_flops_: float, hw: HW = HW()) -> RooflineReport:
+    r = RooflineReport(arch=arch, shape=shape, mesh=mesh, chips=chips,
+                       hlo_flops=hlo_flops, hlo_bytes=hlo_bytes,
+                       collective_bytes=collective_bytes,
+                       model_flops_=model_flops_)
+    # cost_analysis numbers are per-partition (per-device program) under
+    # SPMD; callers pass per-device numbers and chips for totals.
+    r.t_compute = hlo_flops / hw.peak_flops
+    r.t_memory = hlo_bytes / hw.hbm_bw
+    r.t_collective = collective_bytes / (hw.ici_bw * hw.ici_links)
+    terms = {"compute": r.t_compute, "memory": r.t_memory,
+             "collective": r.t_collective}
+    r.bottleneck = max(terms, key=terms.get)
+    r.useful_ratio = (model_flops_ / (hlo_flops * chips)
+                      if hlo_flops else 0.0)
+    return r

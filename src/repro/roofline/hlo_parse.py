@@ -1,0 +1,109 @@
+"""Parse collective-communication bytes out of (S)HLO text.
+
+``cost_analysis()`` reports FLOPs and memory bytes but NOT collective
+traffic, so we scan the compiled module text, build an id → shape table
+from every instruction definition, and sum operand sizes of
+
+    all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+
+Returned per-kind operand bytes feed the roofline's collective term.  Wire
+bytes per chip differ from operand bytes by a ring factor (×2(n−1)/n for
+all-reduce, ×(n−1)/n for gather/scatter); we report both.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["parse_collectives", "COLLECTIVE_KINDS", "wire_bytes"]
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# `%name = f32[128,256]{1,0} op-name(...)` — also matches tuple defs loosely
+_DEF_RE = re.compile(r"%?([\w.\-]+) = \(?(\w+)\[([\d,]*)\]")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Returns {kind: {"count": int, "operand_bytes": int}} plus totals.
+
+    Operand bytes are taken from the shapes that appear *inside the
+    collective instruction's own line*: for every collective, HLO prints the
+    full typed signature of its result; the operand shapes equal the result
+    shape for all-reduce/permute/all-to-all, result/groupsize for
+    all-gather, and result*groupsize for reduce-scatter.  Group size is
+    parsed from replica_groups when present.
+    """
+    out: dict = {k: {"count": 0, "operand_bytes": 0, "result_bytes": 0}
+                 for k in COLLECTIVE_KINDS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _DEF_RE.match(stripped.lstrip("%"))
+        if m is None:
+            continue
+        opname_match = re.search(r"\)?\s*=\s*[^ ]+\s+([\w\-]+)\(", stripped)
+        # find which collective (fused names like all-reduce-start count)
+        kind = None
+        for k in COLLECTIVE_KINDS:
+            if re.search(rf"\b{k}(-start|-done)?\(", stripped):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if f"{kind}-done(" in stripped:
+            continue   # avoid double counting start/done pairs
+        # result shapes on this line (first parenthesised tuple or scalar def)
+        header = stripped.split("(")[0]
+        shapes = _SHAPE_RE.findall(header)
+        rbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        # replica group size
+        gsize = 0
+        gm = re.search(r"replica_groups=\{\{([\d,]+)\}", stripped)
+        if gm:
+            gsize = len(gm.group(1).split(","))
+        else:
+            gm2 = re.search(r"replica_groups=\[\d+,(\d+)\]", stripped)
+            if gm2:
+                gsize = int(gm2.group(1))
+        gsize = max(gsize, 1)
+        if kind == "all-gather":
+            obytes = rbytes // gsize
+        elif kind == "reduce-scatter":
+            obytes = rbytes * gsize
+        else:
+            obytes = rbytes
+        out[kind]["count"] += 1
+        out[kind]["operand_bytes"] += obytes
+        out[kind]["result_bytes"] += rbytes
+    out["total_operand_bytes"] = sum(
+        out[k]["operand_bytes"] for k in COLLECTIVE_KINDS)
+    out["total_count"] = sum(out[k]["count"] for k in COLLECTIVE_KINDS)
+    return out
+
+
+def wire_bytes(kind: str, operand_bytes: int, group: int) -> float:
+    """Ring-algorithm bytes actually crossing links, per participant."""
+    if group <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return operand_bytes * 2.0 * (group - 1) / group
+    if kind in ("all-gather", "reduce-scatter"):
+        return operand_bytes * (group - 1) / group * (
+            group if kind == "all-gather" else 1)
+    return float(operand_bytes)

@@ -1,0 +1,181 @@
+"""Property-based tests (hypothesis) for the ADSALA core invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.halton import halton_sequence, sample_dims, scrambled_halton
+from repro.core.preprocess import (CorrelationPruner, PreprocessPipeline,
+                                   StandardScaler, YeoJohnsonTransformer,
+                                   yeo_johnson, yeo_johnson_inverse)
+from repro.core.lof import lof_scores, remove_outliers
+from repro.core.features import (SUBROUTINES, build_features, feature_names,
+                                 footprint_words, SUBROUTINE_NDIMS)
+from repro.core.split import stratified_split
+
+
+# ---------------------------------------------------------------------------
+# Halton
+# ---------------------------------------------------------------------------
+
+@given(st.integers(10, 300), st.integers(0, 5))
+@settings(max_examples=20, deadline=None)
+def test_scrambled_halton_in_unit_interval(n, seed):
+    pts = scrambled_halton(n, (2, 3, 4), seed=seed)
+    assert pts.shape == (n, 3)
+    assert np.all(pts > 0) and np.all(pts < 1)
+
+
+def test_scrambled_halton_deterministic():
+    a = scrambled_halton(100, (2, 3), seed=7)
+    b = scrambled_halton(100, (2, 3), seed=7)
+    np.testing.assert_array_equal(a, b)
+    c = scrambled_halton(100, (2, 3), seed=8)
+    assert not np.array_equal(a, c)
+
+
+def test_halton_low_discrepancy_vs_iid_worst_case():
+    """Star-discrepancy proxy: max deviation of empirical CDF on a grid —
+    Halton should beat the iid-uniform upper tail comfortably."""
+    n = 512
+    pts = scrambled_halton(n, (2, 3), seed=0)
+    grid = np.linspace(0.1, 0.9, 9)
+    worst = 0.0
+    for gx in grid:
+        for gy in grid:
+            emp = np.mean((pts[:, 0] < gx) & (pts[:, 1] < gy))
+            worst = max(worst, abs(emp - gx * gy))
+    assert worst < 0.05, worst
+
+
+def test_sample_dims_respects_footprint_cap():
+    cap = 64 * 1024
+    fp = lambda d: footprint_words("gemm", d) * 4
+    dims = sample_dims(50, 3, lo=16, hi=512, max_footprint_bytes=cap,
+                       footprint_fn=fp, seed=1)
+    assert all(fp(tuple(d)) <= cap for d in dims)
+    assert dims.min() >= 1
+
+
+# ---------------------------------------------------------------------------
+# Yeo-Johnson
+# ---------------------------------------------------------------------------
+
+@given(st.floats(-2.5, 2.5), st.lists(st.floats(-50, 50), min_size=3,
+                                      max_size=50))
+@settings(max_examples=60, deadline=None)
+def test_yeo_johnson_invertible_and_monotone(lmbda, xs):
+    x = np.asarray(xs)
+    y = yeo_johnson(x, lmbda)
+    back = yeo_johnson_inverse(y, lmbda)
+    np.testing.assert_allclose(back, x, rtol=1e-6, atol=1e-6)
+    order = np.argsort(x, kind="stable")
+    assert np.all(np.diff(y[order]) >= -1e-9)   # monotone
+
+
+def test_yeo_johnson_mle_gaussianizes_lognormal():
+    rng = np.random.default_rng(0)
+    x = rng.lognormal(0, 1, size=(800, 1))
+    t = YeoJohnsonTransformer().fit(x)
+    z = t.transform(x)[:, 0]
+    skew_before = float(np.mean(((x[:, 0] - x.mean()) / x.std()) ** 3))
+    skew_after = float(np.mean(((z - z.mean()) / z.std()) ** 3))
+    assert abs(skew_after) < abs(skew_before) / 3
+
+
+# ---------------------------------------------------------------------------
+# scaler / pruner / pipeline
+# ---------------------------------------------------------------------------
+
+def test_standard_scaler_roundtrip_stats():
+    rng = np.random.default_rng(1)
+    X = rng.normal(3.0, 7.0, size=(500, 4))
+    Z = StandardScaler().fit_transform(X)
+    np.testing.assert_allclose(Z.mean(axis=0), 0, atol=1e-9)
+    np.testing.assert_allclose(Z.std(axis=0), 1, atol=1e-9)
+
+
+def test_correlation_pruner_drops_duplicate_feature():
+    rng = np.random.default_rng(2)
+    a = rng.normal(size=500)
+    b = rng.normal(size=500)
+    X = np.stack([a, b, a * 1.0001 + 1e-6 * rng.normal(size=500)], axis=1)
+    pr = CorrelationPruner(0.8).fit(X)
+    kept = set(pr.keep_.tolist())
+    assert len(kept) == 2 and 1 in kept
+    assert not {0, 2} <= kept          # one of the correlated pair dropped
+
+
+def test_pipeline_state_roundtrip():
+    rng = np.random.default_rng(3)
+    X = np.abs(rng.lognormal(size=(200, 5)))
+    p1 = PreprocessPipeline()
+    Z1 = p1.fit_transform(X)
+    p2 = PreprocessPipeline()
+    p2.set_state(p1.get_state())
+    np.testing.assert_allclose(p2.transform(X), Z1, rtol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# LOF
+# ---------------------------------------------------------------------------
+
+def test_lof_flags_planted_outlier():
+    rng = np.random.default_rng(4)
+    X = rng.normal(size=(300, 3))
+    X[0] = [25.0, -25.0, 25.0]          # gross outlier
+    scores = lof_scores(X, k=20)
+    assert scores[0] > np.percentile(scores[1:], 99)
+
+
+def test_remove_outliers_keeps_at_least_90pct():
+    rng = np.random.default_rng(5)
+    X = rng.normal(size=(200, 4))
+    y = rng.normal(size=200)
+    _, _, keep = remove_outliers(X, y)
+    assert keep.sum() >= 0.9 * len(keep) - 1
+
+
+# ---------------------------------------------------------------------------
+# features
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from(SUBROUTINES), st.integers(1, 2048), st.integers(1, 2048),
+       st.integers(1, 2048), st.integers(1, 64))
+@settings(max_examples=60, deadline=None)
+def test_feature_table_iii_identities(op, m, k, n, nt):
+    ndims = SUBROUTINE_NDIMS[op]
+    dims = np.array([[m, k, n][:ndims]])
+    X = build_features(op, dims, np.array([nt]))
+    names = feature_names(ndims)
+    assert X.shape == (1, len(names))
+    row = dict(zip(names, X[0]))
+    if ndims == 3:
+        assert row["m*k*n"] == pytest.approx(m * k * n)
+        assert row["m*k*n/nt"] == pytest.approx(m * k * n / nt)
+        assert row["footprint"] == pytest.approx(m * k + k * n + m * n)
+    else:
+        assert row["m*n"] == pytest.approx(m * k)   # dims = (m, k) here
+        assert row["m/nt"] == pytest.approx(m / nt)
+    assert np.all(np.isfinite(X))
+
+
+def test_footprint_overwrite_rule():
+    # TRMM/TRSM overwrite B: footprint counts B once (paper footnote 1)
+    assert footprint_words("trmm", (100, 50)) == 100 * 100 + 100 * 50
+    assert footprint_words("syr2k", (64, 32)) == 2 * 64 * 32 + 64 * 64
+
+
+# ---------------------------------------------------------------------------
+# stratified split
+# ---------------------------------------------------------------------------
+
+@given(st.integers(30, 500), st.integers(0, 3))
+@settings(max_examples=20, deadline=None)
+def test_stratified_split_partition(n, seed):
+    rng = np.random.default_rng(seed)
+    y = rng.lognormal(size=n)
+    tr, te = stratified_split(y, test_frac=0.15, seed=seed)
+    assert len(set(tr) & set(te)) == 0
+    assert len(tr) + len(te) == n
+    assert 0 < len(te) <= max(1, int(0.25 * n))

@@ -1,0 +1,120 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) and the numpy blocked
+black-box BLAS vs the pure-jnp oracles, across shapes, dtypes, blocks and
+variants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.knobs import Knob
+from repro.kernels import ops, ref
+from repro.kernels.cpu_blocked import make_operands, run_blocked
+
+OPS = ("gemm", "symm", "syrk", "syr2k", "trmm", "trsm")
+
+
+def _knob(bm, bk, bn, variant="full"):
+    return Knob(tuple(sorted({"bm": bm, "bk": bk, "bn": bn,
+                              "variant": variant}.items())))
+
+
+def _dims_for(op, m, k, n):
+    return {"gemm": (m, k, n), "symm": (m, n), "syrk": (n, k),
+            "syr2k": (n, k), "trmm": (m, n), "trsm": (m, n)}[op]
+
+
+def _rel_err(got, want):
+    got = np.asarray(got, np.float64)
+    want = np.asarray(want, np.float64)
+    return np.max(np.abs(got - want)) / (np.max(np.abs(want)) + 1e-9)
+
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("dims_idx,dims3", [
+    (0, (128, 128, 128)),
+    (1, (256, 128, 384)),
+    (2, (100, 50, 130)),        # padding path
+])
+def test_pallas_matches_ref_f32(op, dims_idx, dims3):
+    dims = _dims_for(op, *dims3)
+    operands = tuple(jnp.asarray(x)
+                     for x in make_operands(op, dims, np.float32, seed=dims_idx))
+    out = ops.run_op(op, operands, knob=_knob(128, 128, 128),
+                     interpret=True)
+    want = ref.REFS[op](*operands)
+    assert out.shape == want.shape
+    assert _rel_err(out, want) < 2e-4, op
+
+
+@pytest.mark.parametrize("op", ("syrk", "syr2k", "trmm"))
+def test_tri_variant_matches_full(op):
+    dims = _dims_for(op, 256, 128, 256)
+    operands = tuple(jnp.asarray(x)
+                     for x in make_operands(op, dims, np.float32, seed=7))
+    full = ops.run_op(op, operands, knob=_knob(128, 128, 128, "full"),
+                      interpret=True)
+    tri = ops.run_op(op, operands, knob=_knob(128, 128, 128, "tri"),
+                     interpret=True)
+    assert _rel_err(tri, full) < 1e-5
+
+
+@pytest.mark.parametrize("op", OPS)
+def test_pallas_bf16(op):
+    dims = _dims_for(op, 128, 128, 128)
+    operands = tuple(jnp.asarray(x, jnp.bfloat16)
+                     for x in make_operands(op, dims, np.float32, seed=3))
+    out = ops.run_op(op, operands, knob=_knob(128, 128, 128), interpret=True)
+    want = ref.REFS[op](*(o.astype(jnp.float32) for o in operands))
+    tol = 0.1 if op == "trsm" else 0.05   # bf16 solve accumulates error
+    assert _rel_err(out.astype(jnp.float32), want) < tol, op
+
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("blocks", [(128, 128, 256), (256, 256, 128)])
+def test_block_config_invariance(op, blocks):
+    """The knob changes runtime, never semantics (the ADSALA contract)."""
+    dims = _dims_for(op, 256, 256, 256)
+    operands = tuple(jnp.asarray(x)
+                     for x in make_operands(op, dims, np.float32, seed=11))
+    a = ops.run_op(op, operands, knob=_knob(*blocks), interpret=True)
+    b = ops.run_op(op, operands, knob=_knob(128, 128, 128), interpret=True)
+    assert _rel_err(a, b) < 1e-5
+
+
+@given(op=st.sampled_from(OPS),
+       m=st.integers(8, 96), k=st.integers(8, 96), n=st.integers(8, 96),
+       bm=st.sampled_from([16, 32, 64]), bn=st.sampled_from([16, 32, 64]),
+       variant=st.sampled_from(["full", "tri"]))
+@settings(max_examples=40, deadline=None)
+def test_numpy_blocked_property_sweep(op, m, k, n, bm, bn, variant):
+    """The calibration executor equals the oracle for arbitrary shapes/blocks
+    (hypothesis sweep; f64 so the only error is algorithmic)."""
+    dims = _dims_for(op, m, k, n)
+    operands = make_operands(op, dims, np.float64, seed=m * 131 + n)
+    got = run_blocked(op, operands, _knob(bm, bm, bn, variant))
+    # jnp ref runs in f32 (x64 off) → f32-level agreement is the bound here
+    want = np.asarray(ref.REFS[op](*(jnp.asarray(o) for o in operands)))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+
+def test_alpha_beta_semantics():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+    out = ops.gemm(a, b, c, alpha=2.0, beta=0.5, knob=_knob(128, 128, 128),
+                   interpret=True)
+    want = 2.0 * (a @ b) + 0.5 * c
+    assert _rel_err(out, want) < 1e-5
+
+
+def test_trsm_solves_system():
+    rng = np.random.default_rng(1)
+    m, n = 256, 64
+    a = jnp.asarray(rng.standard_normal((m, m)) + m * np.eye(m), jnp.float32)
+    x_true = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    b = jnp.tril(a) @ x_true
+    x = ops.trsm(a, b, knob=_knob(128, 128, 128), interpret=True)
+    assert _rel_err(x, x_true) < 1e-4

@@ -1,0 +1,128 @@
+"""From-scratch ML library: fit quality, serialization, tuning, selection."""
+
+import numpy as np
+import pytest
+
+from repro.core.ml import (PAPER_CANDIDATES, cross_val_rmse, make_model,
+                           rmse, tune_model)
+from repro.core import (AdsalaRuntime, ModelRegistry, block_knob_space,
+                        install_subroutine, oracle_time)
+
+
+def _toy(n=300, d=5, seed=0, nonlinear=True):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d))
+    y = 2 * X[:, 0] - X[:, 1]
+    if nonlinear:
+        y = y + X[:, 2] ** 2 + np.where(X[:, 3] > 0, 3.0, -1.0)
+    return X, y + 0.05 * rng.normal(size=n)
+
+
+@pytest.mark.parametrize("name", PAPER_CANDIDATES)
+def test_fit_beats_mean_predictor(name):
+    X, y = _toy()
+    Xt, yt = _toy(seed=1)
+    m = make_model(name).fit(X, y)
+    assert rmse(yt, m.predict(Xt)) < rmse(yt, np.full_like(yt, y.mean()))
+
+
+@pytest.mark.parametrize("name", PAPER_CANDIDATES)
+def test_state_roundtrip_exact(name):
+    X, y = _toy(n=150)
+    m = make_model(name).fit(X, y)
+    m2 = make_model(name)
+    m2.set_state(m.get_state())
+    np.testing.assert_allclose(m.predict(X), m2.predict(X), rtol=1e-12)
+
+
+def test_nonlinear_models_beat_linear_on_nonlinear_target():
+    X, y = _toy(n=500)
+    Xt, yt = _toy(n=300, seed=2)
+    lin = make_model("LinearRegression").fit(X, y)
+    xgb = make_model("XGBoost").fit(X, y)
+    assert rmse(yt, xgb.predict(Xt)) < 0.8 * rmse(yt, lin.predict(Xt))
+
+
+def test_tune_model_returns_fitted_and_not_worse():
+    X, y = _toy(n=250)
+    base = make_model("DecisionTree", max_depth=2)
+    tuned = tune_model(base, X, y, n_trials=4, cv=3, seed=0)
+    assert tuned.predict(X).shape == y.shape
+    assert cross_val_rmse(tuned.clone(), X, y) <= \
+        cross_val_rmse(base.clone(), X, y) * 1.1
+
+
+def test_linear_regression_exact_on_linear_data():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(100, 3))
+    w = np.array([1.0, -2.0, 0.5])
+    y = X @ w + 3.0
+    m = make_model("LinearRegression").fit(X, y)
+    np.testing.assert_allclose(m.predict(X), y, atol=1e-8)
+
+
+def test_bayesian_ridge_shrinks_with_noise():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(60, 8))
+    y = X[:, 0] + 5.0 * rng.normal(size=60)    # mostly noise
+    br = make_model("BayesianRidge").fit(X, y)
+    ols = make_model("LinearRegression").fit(X, y)
+    assert np.linalg.norm(br.coef_[:-1]) < np.linalg.norm(ols.coef_[:-1])
+
+
+# ---------------------------------------------------------------------------
+# end-to-end install → runtime → registry (oracle-timed, fast)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def installed(tmp_path_factory):
+    rng = np.random.default_rng(0)
+    space = block_knob_space(bms=(128, 256), bks=(128, 256), bns=(128, 256))
+    sub = install_subroutine(
+        "gemm", space,
+        lambda dims, knob: oracle_time("gemm", dims, knob, dtype_bytes=2,
+                                       noise_rng=rng),
+        n_samples=40, dim_lo=64, dim_hi=2048, max_footprint_bytes=None,
+        dtype_bytes=2, candidates=("LinearRegression", "DecisionTree"),
+        tune_trials=2)
+    return sub, tmp_path_factory.mktemp("reg")
+
+
+def test_install_selects_by_estimated_speedup(installed):
+    sub, _ = installed
+    best = max(sub.reports, key=lambda r: r.estimated_mean_speedup)
+    assert sub.model_name == best.name
+    for r in sub.reports:
+        assert r.eval_time_us > 0
+        assert np.isfinite(r.estimated_mean_speedup)
+
+
+def test_runtime_memoization_and_argmin(installed):
+    sub, _ = installed
+    rt = AdsalaRuntime()
+    rt.register(sub)
+    k1 = rt.select("gemm", (512, 512, 512), dtype_bytes=2)
+    k2 = rt.select("gemm", (512, 512, 512), dtype_bytes=2)
+    assert k1 == k2 and rt.stats.cache_hits == 1
+    # the selection is the argmin of the model's own predictions
+    pred = sub.predict_times((512, 512, 512))
+    assert sub.knob_space.candidates[int(np.argmin(pred))] == k1
+
+
+def test_registry_roundtrip_same_decisions(installed):
+    sub, reg_dir = installed
+    reg = ModelRegistry(reg_dir)
+    reg.save(sub)
+    rt = AdsalaRuntime()
+    assert reg.load_into(rt) == 1
+    for dims in [(128, 256, 512), (1024, 64, 2048), (300, 300, 300)]:
+        assert rt.select("gemm", dims, dtype_bytes=2) == sub.select(dims)
+
+
+def test_runtime_graceful_default_for_untuned_op(installed):
+    sub, _ = installed
+    rt = AdsalaRuntime()
+    rt.register(sub)
+    from repro.kernels.ops import default_knob
+    got = rt.select_or_default("trsm", (256, 256), 4, default_knob("trsm"))
+    assert got == default_knob("trsm")
