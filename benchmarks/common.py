@@ -7,10 +7,10 @@ from pathlib import Path
 
 import numpy as np
 
+from repro.backends import resolve_backend
 from repro.core import AdsalaRuntime, ModelRegistry
 from repro.core.timing import time_callable
-from repro.kernels.cpu_blocked import make_operands, run_blocked
-from repro.kernels.ops import knob_space_for
+from repro.kernels.cpu_blocked import make_operands, run_blocked  # noqa: F401 (re-export)
 
 RUNS = Path(__file__).resolve().parents[1] / "runs"
 ADSALA = RUNS / "adsala"
@@ -18,41 +18,64 @@ ADSALA = RUNS / "adsala"
 PRECISIONS = {"s": np.float32, "d": np.float64}
 OPS = ("gemm", "symm", "syrk", "syr2k", "trmm", "trsm")
 
+#: the backend the legacy calibration flow measured (the host black box)
+DEFAULT_BACKEND = "cpu_blocked"
 
-def load_runtime() -> AdsalaRuntime | None:
+
+def load_runtime(backend: str | None = None) -> AdsalaRuntime | None:
+    """Hydrate a runtime from the repo's calibration store; ``backend``
+    filters to one tag (None loads every backend's model set)."""
     root = ADSALA / "models"
     if not root.exists():
         return None
     rt = AdsalaRuntime()
-    ModelRegistry(root).load_into(rt)
+    if ModelRegistry(root).load_into(rt, backend=backend) == 0:
+        return None
     return rt
 
 
-def default_knob_from_dataset(op: str, prec: str):
-    """The calibration dataset's baseline (max-parallelism) knob."""
+def default_knob_from_dataset(op: str, prec: str, backend: str | None = None):
+    """The calibration dataset's baseline (max-parallelism) knob; falls back
+    to the backend's analytic default when no dataset was persisted."""
     import json
-    ds = np.load(ADSALA / "datasets" / f"{op}_{prec}.npz")
-    knobs = json.loads(str(ds["knobs"]))
     from repro.core.knobs import Knob
-    return Knob(tuple(sorted(knobs[int(ds["default_idx"])].items())))
+    be_name = backend or DEFAULT_BACKEND
+    # only the default backend owns the legacy untagged dataset files —
+    # another backend must never inherit a baseline knob from a space it
+    # wasn't calibrated over
+    names = [f"{be_name}__{op}_{prec}.npz"]
+    if be_name == DEFAULT_BACKEND:
+        names.append(f"{op}_{prec}.npz")
+    for name in names:
+        path = ADSALA / "datasets" / name
+        if path.exists():
+            ds = np.load(path)
+            knobs = json.loads(str(ds["knobs"]))
+            return Knob(tuple(sorted(knobs[int(ds["default_idx"])].items())))
+    return resolve_backend(backend or DEFAULT_BACKEND).default_knob(op)
 
 
 def measure_speedup(op: str, prec: str, rt: AdsalaRuntime, dims: tuple,
-                    *, repeats: int = 2) -> dict:
-    """One paper-style measurement: t_default vs t_tuned(+t_eval)."""
+                    *, backend: str = DEFAULT_BACKEND,
+                    repeats: int = 2) -> dict:
+    """One paper-style measurement: t_default vs t_tuned(+t_eval), executed
+    through the shared Backend protocol."""
+    be = resolve_backend(backend)
     dtype = PRECISIONS[prec]
     dtype_bytes = np.dtype(dtype).itemsize
-    operands = make_operands(op, dims, dtype, seed=hash(dims) % 9973)
-    default = default_knob_from_dataset(op, prec)
+    operands = be.prepare(be.make_operands(op, dims, dtype,
+                                           seed=hash(dims) % 9973))
+    default = default_knob_from_dataset(op, prec, backend=be.name)
     t0 = time.perf_counter()
-    knob = rt.select(op, dims, dtype_bytes=dtype_bytes)
+    knob = rt.select(op, dims, dtype_bytes=dtype_bytes, backend=be.name)
     t_eval = time.perf_counter() - t0
-    t_def = time_callable(lambda: run_blocked(op, operands, default),
+    t_def = time_callable(lambda: be.execute(op, operands, default),
                           warmup=1, repeats=repeats)
-    t_tuned = time_callable(lambda: run_blocked(op, operands, knob),
+    t_tuned = time_callable(lambda: be.execute(op, operands, knob),
                             warmup=1, repeats=repeats)
-    return {"dims": dims, "t_default": t_def, "t_tuned": t_tuned,
-            "t_eval": t_eval, "speedup": t_def / (t_tuned + t_eval),
+    return {"dims": dims, "backend": be.name, "t_default": t_def,
+            "t_tuned": t_tuned, "t_eval": t_eval,
+            "speedup": t_def / (t_tuned + t_eval),
             "knob": knob.dict, "default": default.dict}
 
 

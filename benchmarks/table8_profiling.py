@@ -48,14 +48,14 @@ CASES = [(64, 2048, 64), (256, 1024, 256), (96, 96, 2048)]
 
 
 def run(quick: bool = False) -> list[str]:
-    rt = load_runtime()
+    rt = load_runtime(backend="cpu_blocked")
     if rt is None:
         return [csv_row("table8.skipped", 0.0, "no-calibration-artifacts")]
     rows, out = [], {}
-    default = default_knob_from_dataset("gemm", "s")
+    default = default_knob_from_dataset("gemm", "s", backend="cpu_blocked")
     for dims in CASES if not quick else CASES[:1]:
         a, b = make_operands("gemm", dims, np.float32, seed=5)
-        knob = rt.select("gemm", dims, dtype_bytes=4)
+        knob = rt.select("gemm", dims, dtype_bytes=4, backend="cpu_blocked")
         prof_def = _profiled_gemm(a, b, default)
         prof_ml = _profiled_gemm(a, b, knob)
         out[str(dims)] = {"default": {**prof_def, "knob": default.dict},

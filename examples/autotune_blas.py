@@ -2,51 +2,60 @@
 measured wall-clock → model selection table (paper Table VI) → held-out
 speedup statistics (paper Table VII row).
 
+Backend-parameterised — the same harness tunes any registered execution
+backend (the repo analogue of the paper's MKL-vs-BLIS generality claim):
+
     PYTHONPATH=src python examples/autotune_blas.py --op syrk --samples 60
+    PYTHONPATH=src python examples/autotune_blas.py --op gemm \\
+        --backend pallas --samples 20
 """
 
 import argparse
+import time
 
 import numpy as np
 
+from repro.backends import available_backends, get_backend
 from repro.core import install_subroutine
 from repro.core.features import SUBROUTINE_NDIMS, footprint_words
 from repro.core.halton import sample_dims
 from repro.core.timing import time_callable
-from repro.kernels.cpu_blocked import make_operands, run_blocked
-from repro.kernels.ops import knob_space_for
 
 
 def main():
     p = argparse.ArgumentParser()
     p.add_argument("--op", default="syrk")
+    p.add_argument("--backend", default="cpu_blocked",
+                   choices=available_backends())
     p.add_argument("--samples", type=int, default=60)
+    p.add_argument("--sizes", default="")
     args = p.parse_args()
     op = args.op
 
-    space = knob_space_for(op, sizes=(32, 64, 128))
-    cache = {}
-
-    def timer(dims, knob):
-        if cache.get("dims") != dims:
-            cache["dims"] = dims
-            cache["ops"] = make_operands(op, dims, np.float32)
-        return time_callable(lambda: run_blocked(op, cache["ops"], knob),
-                             warmup=0, repeats=2)
+    be = get_backend(args.backend)
+    if args.sizes:
+        sizes = tuple(int(s) for s in args.sizes.split(","))
+    else:
+        # pallas interpret-mode pays a per-(shape,knob) compile: coarse grid
+        sizes = (128, 256) if be.name == "pallas" else (32, 64, 128)
+    space = be.knob_space(op, sizes=sizes)
+    timer = be.timer_fn(op, np.float32, warmup=0 if be.name != "pallas"
+                        else 1, repeats=2)
 
     sub = install_subroutine(op, space, timer, n_samples=args.samples,
                              dim_lo=32, dim_hi=512,
                              max_footprint_bytes=4_000_000, dtype_bytes=4,
-                             tune_trials=3,
+                             tune_trials=3, backend=be.name,
                              progress=lambda i, n: print(
                                  f"  gathered {i}/{n}", end="\r"))
-    print(f"\n== model selection (paper Table VI) — best: {sub.model_name}")
+    print(f"\n== [{be.name}] model selection (paper Table VI) — "
+          f"best: {sub.model_name}")
     for r in sorted(sub.reports, key=lambda r: -r.estimated_mean_speedup):
         print(f"  {r.name:18s} nrmse={r.normalized_rmse:.2f} "
               f"ideal={r.ideal_mean_speedup:.2f} eval={r.eval_time_us:7.0f}µs "
               f"est={r.estimated_mean_speedup:.2f}")
 
-    # held-out speedup (paper Table VII)
+    # held-out speedup (paper Table VII), through the shared Backend protocol
     default = sub.dataset.knob_space.candidates[
         sub.dataset.default_knob_index()]
     fp = lambda d: footprint_words(op, d) * 4
@@ -56,16 +65,19 @@ def main():
     sp = []
     for drow in test:
         dims = tuple(int(v) for v in drow)
-        operands = make_operands(op, dims, np.float32)
+        operands = be.prepare(be.make_operands(op, dims, np.float32))
+        t0 = time.perf_counter()
         knob = sub.select(dims)
-        t_def = time_callable(lambda: run_blocked(op, operands, default),
+        t_eval = time.perf_counter() - t0
+        t_def = time_callable(lambda: be.execute(op, operands, default),
                               warmup=1, repeats=2)
-        t_ml = time_callable(lambda: run_blocked(op, operands, knob),
+        t_ml = time_callable(lambda: be.execute(op, operands, knob),
                              warmup=1, repeats=2)
-        sp.append(t_def / t_ml)
+        sp.append(t_def / (t_ml + t_eval))
     sp = np.array(sp)
-    print(f"== held-out speedup (paper Table VII): mean={sp.mean():.2f} "
-          f"median={np.median(sp):.2f} min={sp.min():.2f} max={sp.max():.2f}")
+    print(f"== [{be.name}] held-out speedup (paper Table VII): "
+          f"mean={sp.mean():.2f} median={np.median(sp):.2f} "
+          f"min={sp.min():.2f} max={sp.max():.2f}")
 
 
 if __name__ == "__main__":

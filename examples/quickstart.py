@@ -1,41 +1,34 @@
 """Quickstart: ADSALA in 60 seconds.
 
-Install-time: tune DGEMM's execution config on THIS machine with real
-wall-clock timings; runtime: the library picks the argmin-predicted config
-per call, memoized across repeated shapes.
+Install-time: tune SGEMM's execution config on THIS machine with real
+wall-clock timings (through the ``cpu_blocked`` execution backend); runtime:
+the library picks the argmin-predicted config per call, memoized across
+repeated shapes and keyed by backend.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import time
-
 import numpy as np
 
+from repro.backends import get_backend
 from repro.core import AdsalaRuntime, install_subroutine
 from repro.core.timing import time_callable
-from repro.kernels.cpu_blocked import make_operands, run_blocked
-from repro.kernels.ops import knob_space_for
 
 
 def main():
     # 1. install: Halton-sample dims, time every candidate block config,
     #    train + select the ML model by estimated speedup (paper Fig. 1a)
-    space = knob_space_for("gemm", sizes=(32, 64, 128))
-    cache = {}
-
-    def timer(dims, knob):
-        if cache.get("dims") != dims:
-            cache["dims"] = dims
-            cache["ops"] = make_operands("gemm", dims, np.float32)
-        return time_callable(lambda: run_blocked("gemm", cache["ops"], knob),
-                             warmup=0, repeats=1)
+    be = get_backend("cpu_blocked")
+    space = be.knob_space("gemm", sizes=(32, 64, 128))
+    timer = be.timer_fn("gemm", np.float32, warmup=0, repeats=1)
 
     print("installing (≈1 min of timing + model selection)...")
     sub = install_subroutine("gemm", space, timer, n_samples=30,
                              dim_lo=32, dim_hi=384,
                              max_footprint_bytes=3_000_000, dtype_bytes=4,
                              candidates=("LinearRegression", "DecisionTree",
-                                         "XGBoost"), tune_trials=2)
+                                         "XGBoost"), tune_trials=2,
+                             backend=be.name)
     print(f"selected model: {sub.model_name}")
     for r in sub.reports:
         print(f"  {r.name:18s} est_speedup={r.estimated_mean_speedup:.2f} "
@@ -47,17 +40,18 @@ def main():
     default = sub.dataset.knob_space.candidates[
         sub.dataset.default_knob_index()]
     for dims in [(320, 64, 320), (96, 384, 96), (256, 256, 64)]:
-        operands = make_operands("gemm", dims, np.float32)
-        knob = rt.select("gemm", dims, dtype_bytes=4)
-        t_def = time_callable(lambda: run_blocked("gemm", operands, default),
+        operands = be.make_operands("gemm", dims, np.float32)
+        knob = rt.select("gemm", dims, dtype_bytes=4, backend=be.name)
+        t_def = time_callable(lambda: be.execute("gemm", operands, default),
                               warmup=1, repeats=3)
-        t_ml = time_callable(lambda: run_blocked("gemm", operands, knob),
+        t_ml = time_callable(lambda: be.execute("gemm", operands, knob),
                              warmup=1, repeats=3)
         print(f"dims={dims}: default={t_def*1e3:.2f}ms "
               f"adsala={t_ml*1e3:.2f}ms speedup={t_def/t_ml:.2f}x "
               f"knob={knob.dict}")
     print(f"cache hit rate: {rt.stats.hit_rate:.2f} "
-          f"(calls={rt.stats.calls})")
+          f"(calls={rt.stats.calls}, by backend: "
+          f"{rt.stats.backend_hit_rates})")
 
 
 if __name__ == "__main__":

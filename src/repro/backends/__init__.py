@@ -1,0 +1,35 @@
+"""Pluggable multi-backend execution layer (paper: MKL-vs-BLIS generality).
+
+The :class:`Backend` protocol abstracts one BLAS L3 implementation; the
+module-level registry holds the process's backends and implements the
+requested→ref fallback chain.  The three built-ins are registered on import:
+
+  pallas       — Pallas TPU kernels (interpret mode on CPU hosts)
+  cpu_blocked  — numpy blocked BLAS (the host-measurable black box)
+  ref          — pure-jnp oracle (always available; fallback terminal)
+"""
+
+from .base import Backend, L3_OPS
+from .cpu import CpuBlockedBackend
+from .pallas import PallasBackend
+from .ref import RefBackend
+from .registry import (FALLBACK_BACKEND, available_backends, fallback_chain,
+                       get_backend, register_backend, resolve_backend,
+                       unregister_backend)
+
+__all__ = [
+    "Backend", "L3_OPS", "RefBackend", "CpuBlockedBackend", "PallasBackend",
+    "register_backend", "unregister_backend", "get_backend",
+    "available_backends", "resolve_backend", "fallback_chain",
+    "FALLBACK_BACKEND",
+]
+
+
+def _install_builtins() -> None:
+    for cls in (RefBackend, CpuBlockedBackend, PallasBackend):
+        be = cls()
+        if be.name not in available_backends():
+            register_backend(be)
+
+
+_install_builtins()

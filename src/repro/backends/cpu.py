@@ -1,0 +1,40 @@
+"""The ``cpu_blocked`` backend: numpy blocked BLAS L3 (kernels.cpu_blocked).
+
+This is the host-measurable black box of the original calibration path — the
+same blocked algorithms the Pallas kernels run on TPU, expressed in numpy,
+where the (bm, bk, bn) knob has real cache-hierarchy effects.  In the paper's
+MKL-vs-BLIS comparison this plays the role of the second baseline library.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.knobs import Knob, KnobSpace
+
+from .base import Backend
+
+__all__ = ["CpuBlockedBackend"]
+
+
+class CpuBlockedBackend(Backend):
+    name = "cpu_blocked"
+
+    #: cache-scale block edges (vs the TPU backend's MXU-aligned 128..512)
+    DEFAULT_SIZES = (64, 128, 256)
+
+    def knob_space(self, op: str, *,
+                   sizes: tuple[int, ...] | None = None) -> KnobSpace:
+        from repro.kernels.ops import knob_space_for
+        return knob_space_for(op, sizes=tuple(sizes or self.DEFAULT_SIZES))
+
+    def prepare(self, operands: tuple) -> tuple:
+        return tuple(np.asarray(x) for x in operands)
+
+    def execute(self, op: str, operands: tuple, knob: Knob | None = None,
+                **kw):
+        from repro.kernels.cpu_blocked import run_blocked
+        if knob is None:
+            knob = self.default_knob(op)
+        kw.pop("interpret", None)   # numpy path has no kernel-mode switch
+        return run_blocked(op, self.prepare(operands), knob, **kw)

@@ -1,0 +1,52 @@
+"""The ``pallas`` backend: the repo's Pallas TPU kernels (kernels.ops).
+
+On a TPU host the kernels run compiled; on CPU-only hosts they run in
+interpret mode (still jit-compiled, so post-warmup wall-clock is meaningful
+for calibration at small scales).  The mode is auto-detected and can be
+forced via the constructor.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.knobs import Knob, KnobSpace
+
+from .base import Backend
+
+__all__ = ["PallasBackend"]
+
+
+def _host_has_tpu() -> bool:
+    try:
+        import jax
+        return any(d.platform == "tpu" for d in jax.devices())
+    except Exception:
+        return False
+
+
+class PallasBackend(Backend):
+    name = "pallas"
+    selects_own_knob = True     # ops.py selects at jit trace time
+
+    def __init__(self, *, interpret: bool | None = None) -> None:
+        self.interpret = (not _host_has_tpu()) if interpret is None \
+            else interpret
+
+    def knob_space(self, op: str, *,
+                   sizes: tuple[int, ...] | None = None) -> KnobSpace:
+        from repro.kernels.ops import knob_space_for
+        return knob_space_for(op, sizes=tuple(sizes) if sizes else None)
+
+    def default_knob(self, op: str) -> Knob:
+        from repro.kernels.ops import default_knob
+        return default_knob(op)
+
+    def prepare(self, operands: tuple) -> tuple:
+        return tuple(jnp.asarray(x) for x in operands)
+
+    def execute(self, op: str, operands: tuple, knob: Knob | None = None,
+                **kw):
+        from repro.kernels.ops import PALLAS_OPS
+        kw.setdefault("interpret", self.interpret)
+        return PALLAS_OPS[op](*operands, knob=knob, **kw)

@@ -1,0 +1,33 @@
+"""The ``ref`` backend: pure-jnp oracle semantics, always available.
+
+It is the terminal element of every fallback chain and the ground truth for
+``scripts/check_backends.py``.  Its knob space is a single no-op candidate so
+the tuner/runtime machinery stays total over it (a registered but knob-free
+backend exercises the same code paths with K=1).
+"""
+
+from __future__ import annotations
+
+from repro.core.knobs import Knob, KnobSpace, _grid_parallelism
+
+from .base import Backend
+
+__all__ = ["RefBackend"]
+
+
+class RefBackend(Backend):
+    name = "ref"
+
+    def knob_space(self, op: str, *,
+                   sizes: tuple[int, ...] | None = None) -> KnobSpace:
+        edge = (sizes or (128,))[0]
+        return KnobSpace("blocks",
+                         [{"bm": edge, "bk": edge, "bn": edge,
+                           "variant": "full"}],
+                         parallelism_fn=_grid_parallelism)
+
+    def execute(self, op: str, operands: tuple, knob: Knob | None = None,
+                **kw):
+        from repro.kernels.ref import REFS
+        kw.pop("interpret", None)   # oracle has no kernel-mode switch
+        return REFS[op](*operands, **kw)

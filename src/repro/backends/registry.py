@@ -1,0 +1,61 @@
+"""Process-global backend registry with a graceful fallback chain.
+
+``resolve_backend(name)`` implements the dispatch policy used by
+:func:`repro.kernels.ops.run_op`: the requested backend if registered and
+available on this host, otherwise the ``ref`` backend (numpy/jnp reference —
+always executable), so a caller asking for an absent accelerator path still
+gets a correct result instead of a crash.
+"""
+
+from __future__ import annotations
+
+from .base import Backend
+
+__all__ = ["register_backend", "unregister_backend", "get_backend",
+           "available_backends", "resolve_backend", "fallback_chain",
+           "FALLBACK_BACKEND"]
+
+#: terminal element of every fallback chain — must always be registered
+FALLBACK_BACKEND = "ref"
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend, *, overwrite: bool = False) -> Backend:
+    if not overwrite and backend.name in _REGISTRY:
+        raise ValueError(f"backend {backend.name!r} already registered")
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def unregister_backend(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"no backend {name!r}; registered: "
+                       f"{available_backends()}") from None
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def fallback_chain(name: str) -> tuple[str, ...]:
+    """The dispatch order for a requested backend name."""
+    return (name,) if name == FALLBACK_BACKEND else (name, FALLBACK_BACKEND)
+
+
+def resolve_backend(backend: str | Backend | None) -> Backend:
+    """Requested backend → ref fallback; raises only if even ``ref`` is gone."""
+    if isinstance(backend, Backend):
+        return backend
+    for name in fallback_chain(backend or FALLBACK_BACKEND):
+        be = _REGISTRY.get(name)
+        if be is not None and be.is_available():
+            return be
+    raise KeyError(f"no executable backend for {backend!r} "
+                   f"(registered: {available_backends()})")

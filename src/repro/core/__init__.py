@@ -19,8 +19,9 @@ from .oracle import V5E, TpuSpec, oracle_time
 from .preprocess import PreprocessPipeline, YeoJohnsonTransformer
 from .lof import lof_scores, remove_outliers
 from .selection import ModelReport, evaluate_candidates, select_best
-from .tuner import TunedSubroutine, install_subroutine
-from .runtime import AdsalaRuntime, global_runtime
+from .tuner import TunedSubroutine, install_backend, install_subroutine
+from .runtime import (AdsalaRuntime, BackendStats, RuntimeStats,
+                      global_runtime)
 from .registry import (ModelRegistry, load_subroutine, pack_state,
                        save_subroutine, unpack_state)
 from .distill import DistilledTree
@@ -32,7 +33,8 @@ __all__ = [
     "TimingDataset", "gather", "V5E", "TpuSpec", "oracle_time",
     "PreprocessPipeline", "YeoJohnsonTransformer", "lof_scores",
     "remove_outliers", "ModelReport", "evaluate_candidates", "select_best",
-    "TunedSubroutine", "install_subroutine", "AdsalaRuntime",
+    "TunedSubroutine", "install_subroutine", "install_backend",
+    "AdsalaRuntime", "BackendStats", "RuntimeStats",
     "global_runtime", "ModelRegistry", "load_subroutine", "pack_state",
     "save_subroutine", "unpack_state", "DistilledTree",
 ]

@@ -20,10 +20,21 @@ import numpy as np
 from .knobs import KnobSpace
 from .ml import make_model
 from .preprocess import PreprocessPipeline
-from .tuner import TunedSubroutine
+from .tuner import SCHEMA_VERSION, TunedSubroutine
 
 __all__ = ["pack_state", "unpack_state", "save_subroutine",
            "load_subroutine", "ModelRegistry"]
+
+#: backend assumed for v1 artifacts persisted before backend tagging.
+#: Legacy stores were *timed* on the cpu_blocked black box but *served* the
+#: pallas ops path (the seed's kernels.ops consulted them directly), so
+#: "pallas" preserves their dispatch role; recalibrate to retag.
+_LEGACY_BACKEND = "pallas"
+
+
+def _artifact_backend(path: Path) -> str:
+    return path.stem.split("__", 1)[0] if "__" in path.stem \
+        else _LEGACY_BACKEND
 
 
 def _encode(obj):
@@ -71,14 +82,26 @@ def _atomic_write(path: Path, data: bytes) -> None:
         raise
 
 
+def artifact_name(sub: TunedSubroutine) -> str:
+    """``{backend}__{op}_b{bytes}.adsala`` (legacy v1 files had no backend
+    prefix and load as the ``pallas`` backend)."""
+    return f"{sub.backend}__{sub.op}_b{sub.dtype_bytes}.adsala"
+
+
 def save_subroutine(sub: TunedSubroutine, root: str | Path) -> Path:
-    path = Path(root) / f"{sub.op}_b{sub.dtype_bytes}.adsala"
+    path = Path(root) / artifact_name(sub)
     _atomic_write(path, pack_state(sub.get_state()))
     return path
 
 
 def load_subroutine(path: str | Path) -> TunedSubroutine:
     state = unpack_state(Path(path).read_bytes())
+    version = int(state.get("version", 1))
+    if version > SCHEMA_VERSION:
+        raise ValueError(
+            f"{path}: artifact schema v{version} is newer than this "
+            f"library's v{SCHEMA_VERSION}; upgrade the library or "
+            f"recalibrate")
     knobs = KnobSpace(state["knobs"]["name"], state["knobs"]["candidates"])
     # restore grid-parallelism semantics for block knob spaces
     if knobs.name == "blocks":
@@ -91,11 +114,17 @@ def load_subroutine(path: str | Path) -> TunedSubroutine:
     return TunedSubroutine(
         op=state["op"], dtype_bytes=int(state["dtype_bytes"]),
         knob_space=knobs, pipeline=pipeline, model=model,
-        model_name=state["model_name"], log_target=bool(state["log_target"]))
+        model_name=state["model_name"], log_target=bool(state["log_target"]),
+        backend=str(state.get("backend", _LEGACY_BACKEND)))
 
 
 class ModelRegistry:
-    """Directory of installed subroutine artifacts."""
+    """Directory of installed, backend-tagged subroutine artifacts.
+
+    A process hydrates its per-backend model sets at startup with a single
+    ``registry.load_into(runtime)`` — every artifact carries its backend tag,
+    so one directory can hold the full pallas + cpu_blocked (+ custom) sets.
+    """
 
     def __init__(self, root: str | Path) -> None:
         self.root = Path(root)
@@ -103,13 +132,27 @@ class ModelRegistry:
     def save(self, sub: TunedSubroutine) -> Path:
         return save_subroutine(sub, self.root)
 
-    def load_all(self) -> list[TunedSubroutine]:
+    def load_all(self, backend: str | None = None) -> list[TunedSubroutine]:
+        """Load artifacts, filtering by the filename's backend tag *before*
+        unpacking — one backend's bad/newer artifact can't break another's
+        load, and startup only unpickles what it asked for."""
         if not self.root.exists():
             return []
-        return [load_subroutine(p) for p in sorted(self.root.glob("*.adsala"))]
+        paths = sorted(self.root.glob("*.adsala"))
+        if backend is not None:
+            paths = [p for p in paths if _artifact_backend(p) == backend]
+        return [load_subroutine(p) for p in paths]
 
-    def load_into(self, runtime) -> int:
-        subs = self.load_all()
+    def backends(self) -> tuple[str, ...]:
+        """Backend tags present in the store (from filenames; legacy
+        unprefixed files are pallas)."""
+        if not self.root.exists():
+            return ()
+        return tuple(sorted({_artifact_backend(p)
+                             for p in self.root.glob("*.adsala")}))
+
+    def load_into(self, runtime, backend: str | None = None) -> int:
+        subs = self.load_all(backend)
         for s in subs:
             runtime.register(s)
         return len(subs)

@@ -1,4 +1,4 @@
-"""AdsalaRuntime — the runtime library (paper Fig. 1b).
+"""AdsalaRuntime — the runtime library (paper Fig. 1b), backend-keyed.
 
 Loads persisted :class:`TunedSubroutine` artifacts and, per BLAS call,
 predicts the runtime of every knob candidate and applies the argmin.  The
@@ -6,89 +6,159 @@ paper memoizes the *last* call's dims→decision; we keep that behaviour and
 additionally offer a bounded LRU cache (beyond-paper, DESIGN.md §7.2) —
 transformer workloads emit a small set of distinct GEMM shapes, so the hit
 rate is near 1 after the first step.
+
+Beyond the paper's single-library setting, one runtime instance holds tuned
+model sets for several execution backends side by side: the subroutine table
+and the decision cache are keyed by ``(backend, op, dtype_bytes)``, and
+:class:`RuntimeStats` reports hit-rate per backend.  All mutation is guarded
+by a lock — the batched serving path issues concurrent selections.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
 
 from .knobs import Knob
 from .tuner import TunedSubroutine
 
-__all__ = ["AdsalaRuntime", "RuntimeStats"]
+__all__ = ["AdsalaRuntime", "BackendStats", "RuntimeStats", "global_runtime",
+           "DEFAULT_BACKEND"]
+
+#: backend assumed when a caller or a legacy (v1) artifact names none
+DEFAULT_BACKEND = "pallas"
 
 
 @dataclasses.dataclass
-class RuntimeStats:
+class BackendStats:
     calls: int = 0
     cache_hits: int = 0
-    eval_seconds: float = 0.0
+    default_calls: int = 0      # select_or_default served the fallback knob
 
     @property
     def hit_rate(self) -> float:
         return self.cache_hits / self.calls if self.calls else 0.0
 
 
+@dataclasses.dataclass
+class RuntimeStats:
+    calls: int = 0
+    cache_hits: int = 0
+    default_calls: int = 0
+    eval_seconds: float = 0.0
+    backends: dict[str, BackendStats] = dataclasses.field(
+        default_factory=dict)
+
+    def for_backend(self, name: str) -> BackendStats:
+        return self.backends.setdefault(name, BackendStats())
+
+    @property
+    def hit_rate(self) -> float:
+        return self.cache_hits / self.calls if self.calls else 0.0
+
+    @property
+    def backend_hit_rates(self) -> dict[str, float]:
+        return {name: b.hit_rate for name, b in sorted(self.backends.items())}
+
+
 class AdsalaRuntime:
-    """Per-process decision engine for all tuned subroutines."""
+    """Per-process decision engine for all tuned (backend, subroutine) pairs."""
 
     def __init__(self, *, cache_size: int = 256) -> None:
         # paper's behaviour = cache_size 1 (last call only)
-        self._subs: dict[tuple[str, int], TunedSubroutine] = {}
+        self._subs: dict[tuple[str, str, int], TunedSubroutine] = {}
         self._cache: collections.OrderedDict[tuple, Knob] = \
             collections.OrderedDict()
         self._cache_size = max(1, cache_size)
+        self._lock = threading.RLock()
         self.stats = RuntimeStats()
 
     # -- registration --------------------------------------------------------
-    def register(self, sub: TunedSubroutine) -> None:
-        self._subs[(sub.op, sub.dtype_bytes)] = sub
+    def register(self, sub: TunedSubroutine, *,
+                 backend: str | None = None) -> None:
+        name = backend or getattr(sub, "backend", None) or DEFAULT_BACKEND
+        with self._lock:
+            self._subs[(name, sub.op, sub.dtype_bytes)] = sub
 
-    def has(self, op: str, dtype_bytes: int) -> bool:
-        return (op, dtype_bytes) in self._subs
+    def has(self, op: str, dtype_bytes: int,
+            backend: str = DEFAULT_BACKEND) -> bool:
+        with self._lock:
+            return (backend, op, dtype_bytes) in self._subs
 
-    def subroutine(self, op: str, dtype_bytes: int) -> TunedSubroutine:
-        return self._subs[(op, dtype_bytes)]
+    def subroutine(self, op: str, dtype_bytes: int,
+                   backend: str = DEFAULT_BACKEND) -> TunedSubroutine:
+        with self._lock:
+            return self._subs[(backend, op, dtype_bytes)]
+
+    def backends(self) -> tuple[str, ...]:
+        """Backend names with at least one registered subroutine."""
+        with self._lock:
+            return tuple(sorted({k[0] for k in self._subs}))
 
     # -- the runtime decision -------------------------------------------------
-    def select(self, op: str, dims: tuple[int, ...],
-               dtype_bytes: int = 4) -> Knob:
-        key = (op, dtype_bytes, tuple(int(d) for d in dims))
-        self.stats.calls += 1
-        hit = self._cache.get(key)
-        if hit is not None:
-            self.stats.cache_hits += 1
-            self._cache.move_to_end(key)
-            return hit
-        sub = self._subs[(op, dtype_bytes)]
+    def select(self, op: str, dims: tuple[int, ...], dtype_bytes: int = 4,
+               backend: str = DEFAULT_BACKEND) -> Knob:
+        key = (backend, op, dtype_bytes, tuple(int(d) for d in dims))
+        with self._lock:
+            self.stats.calls += 1
+            bstats = self.stats.for_backend(backend)
+            bstats.calls += 1
+            hit = self._cache.get(key)
+            if hit is not None:
+                self.stats.cache_hits += 1
+                bstats.cache_hits += 1
+                self._cache.move_to_end(key)
+                return hit
+            sub = self._subs[(backend, op, dtype_bytes)]
+        # model evaluation runs unlocked (pure numpy, deterministic) so
+        # concurrent distinct-shape selections don't serialise; a racing
+        # duplicate computes the same knob and the second store is a no-op
         t0 = time.perf_counter()
-        knob = sub.select(key[2])
-        self.stats.eval_seconds += time.perf_counter() - t0
-        self._cache[key] = knob
-        while len(self._cache) > self._cache_size:
-            self._cache.popitem(last=False)
+        knob = sub.select(key[3])
+        dt = time.perf_counter() - t0
+        with self._lock:
+            self.stats.eval_seconds += dt
+            self._cache[key] = knob
+            self._cache.move_to_end(key)
+            while len(self._cache) > self._cache_size:
+                self._cache.popitem(last=False)
         return knob
 
     def select_or_default(self, op: str, dims: tuple[int, ...],
-                          dtype_bytes: int, default: Knob) -> Knob:
+                          dtype_bytes: int, default: Knob, *,
+                          backend: str = DEFAULT_BACKEND) -> Knob:
         """Graceful degradation: untuned subroutines run the default config
-        (a node that lost its model files keeps serving — fault tolerance)."""
-        if (op, dtype_bytes) in self._subs:
-            return self.select(op, dims, dtype_bytes)
-        return default
+        (a node that lost its model files keeps serving — fault tolerance).
+        Default-path calls are recorded so `RuntimeStats` sees all traffic."""
+        with self._lock:
+            if (backend, op, dtype_bytes) not in self._subs:
+                self.stats.calls += 1
+                self.stats.default_calls += 1
+                bstats = self.stats.for_backend(backend)
+                bstats.calls += 1
+                bstats.default_calls += 1
+                return default
+        return self.select(op, dims, dtype_bytes, backend=backend)
 
     def clear_cache(self) -> None:
-        self._cache.clear()
+        with self._lock:
+            self._cache.clear()
+
+    def cache_len(self) -> int:
+        with self._lock:
+            return len(self._cache)
 
 
 #: process-global runtime used by kernels.ops when none is passed explicitly
 _GLOBAL: AdsalaRuntime | None = None
+_GLOBAL_LOCK = threading.Lock()
 
 
 def global_runtime() -> AdsalaRuntime:
     global _GLOBAL
-    if _GLOBAL is None:
-        _GLOBAL = AdsalaRuntime()
-    return _GLOBAL
+    with _GLOBAL_LOCK:
+        if _GLOBAL is None:
+            _GLOBAL = AdsalaRuntime()
+        return _GLOBAL

@@ -22,7 +22,11 @@ from .preprocess import PreprocessPipeline
 from .selection import ModelReport, evaluate_candidates, select_best
 from .split import stratified_split
 
-__all__ = ["TunedSubroutine", "install_subroutine"]
+__all__ = ["TunedSubroutine", "install_subroutine", "install_backend"]
+
+#: persisted artifact schema: v1 = single-backend (implicit pallas),
+#: v2 = backend-tagged
+SCHEMA_VERSION = 2
 
 
 @dataclasses.dataclass
@@ -37,6 +41,7 @@ class TunedSubroutine:
     log_target: bool
     reports: list[ModelReport] = dataclasses.field(default_factory=list)
     dataset: TimingDataset | None = None
+    backend: str = "pallas"             # execution backend this was tuned on
 
     # -- runtime decision --------------------------------------------------
     def predict_times(self, dims: tuple[int, ...]) -> np.ndarray:
@@ -53,6 +58,8 @@ class TunedSubroutine:
     # -- persistence ---------------------------------------------------------
     def get_state(self) -> dict:
         return {
+            "version": SCHEMA_VERSION,
+            "backend": self.backend,
             "op": self.op,
             "dtype_bytes": self.dtype_bytes,
             "knobs": self.knob_space.get_state(),
@@ -84,6 +91,7 @@ def install_subroutine(
     dataset: TimingDataset | None = None,
     keep_dataset: bool = True,
     progress: Callable[[int, int], None] | None = None,
+    backend: str = "pallas",
 ) -> TunedSubroutine:
     """Run the full ADSALA install for one subroutine; returns the artifact."""
     ds = dataset if dataset is not None else gather(
@@ -117,4 +125,43 @@ def install_subroutine(
         op=op, dtype_bytes=dtype_bytes, knob_space=knob_space,
         pipeline=pipeline, model=best.model, model_name=best.name,
         log_target=log_target, reports=reports,
-        dataset=ds if keep_dataset else None)
+        dataset=ds if keep_dataset else None, backend=backend)
+
+
+def install_backend(
+    backend,                            # repro.backends.Backend
+    *,
+    ops: Sequence[str] | None = None,
+    dtype=None,
+    sizes: Sequence[int] | None = None,
+    runtime=None,                       # AdsalaRuntime to register into
+    registry=None,                      # ModelRegistry to persist into
+    log: Callable[[str], None] | None = None,
+    **install_kw,
+) -> dict[str, TunedSubroutine]:
+    """Sweep all (or selected) ops of one execution backend in one call.
+
+    The backend supplies its own knob space and calibration timer, so the
+    identical install pipeline runs against any registered implementation —
+    the repo analogue of installing ADSALA on MKL and then on BLIS.  Tuned
+    artifacts are optionally registered into a live runtime and persisted
+    backend-tagged through a :class:`~repro.core.registry.ModelRegistry`.
+    """
+    dtype = np.float32 if dtype is None else dtype
+    dtype_bytes = int(np.dtype(dtype).itemsize)
+    out: dict[str, TunedSubroutine] = {}
+    for op in (tuple(ops) if ops else backend.ops()):
+        space = (backend.knob_space(op, sizes=tuple(sizes)) if sizes
+                 else backend.knob_space(op))
+        timer = backend.timer_fn(op, dtype)
+        sub = install_subroutine(op, space, timer, dtype_bytes=dtype_bytes,
+                                 backend=backend.name, **install_kw)
+        if registry is not None:
+            registry.save(sub)
+        if runtime is not None:
+            runtime.register(sub)
+        out[op] = sub
+        if log is not None:
+            log(f"[install_backend] {backend.name}/{op}: "
+                f"best={sub.model_name} over {len(space)} knobs")
+    return out

@@ -1,0 +1,15 @@
+"""jax version-compatibility shims for the Pallas TPU kernels.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` across
+jax releases; resolve whichever this jax provides once, here, so the kernel
+modules stay version-agnostic.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

@@ -32,6 +32,7 @@ from .trsm import trsm_pallas
 __all__ = [
     "gemm", "symm", "syrk", "syr2k", "trmm", "trsm",
     "knob_space_for", "default_knob", "dims_of", "run_op", "DTYPE_BYTES",
+    "PALLAS_OPS",
 ]
 
 
@@ -106,7 +107,7 @@ def _select(op: str, dims: tuple[int, ...], dtype,
         return knob
     rt = runtime if runtime is not None else global_runtime()
     return rt.select_or_default(op, dims, DTYPE_BYTES(dtype),
-                                default_knob(op))
+                                default_knob(op), backend="pallas")
 
 
 def _pad_to(x, rows: int, cols: int):
@@ -205,9 +206,32 @@ def trsm(a, b, *, alpha=1.0, knob=None, runtime=None,
     return out[:m, :n]
 
 
-_OPS = {"gemm": gemm, "symm": symm, "syrk": syrk, "syr2k": syr2k,
-        "trmm": trmm, "trsm": trsm}
+#: the pallas-path executors (what the ``pallas`` backend dispatches to)
+PALLAS_OPS = {"gemm": gemm, "symm": symm, "syrk": syrk, "syr2k": syr2k,
+              "trmm": trmm, "trsm": trsm}
+_OPS = PALLAS_OPS   # back-compat alias
 
 
-def run_op(op: str, operands: tuple, **kw):
-    return _OPS[op](*operands, **kw)
+def run_op(op: str, operands: tuple, *, backend: str = "pallas",
+           knob: Optional[Knob] = None,
+           runtime: Optional[AdsalaRuntime] = None, **kw):
+    """Execute ``op`` through the backend registry.
+
+    Dispatch resolves the requested backend with a graceful fallback chain
+    (requested → ref), so an unregistered or host-unavailable backend still
+    yields a correct result.  When no ``knob`` is given the ADSALA runtime
+    selects one under the *resolved* backend's key, falling back to that
+    backend's default config if it has no tuned model.
+    """
+    from repro.backends import resolve_backend
+    be = resolve_backend(backend)
+    if be.selects_own_knob:
+        # the backend's executors resolve the knob themselves (pallas: at
+        # jit trace time) — forward the runtime instead of pre-selecting
+        return be.execute(op, operands, knob, runtime=runtime, **kw)
+    if knob is None:
+        rt = runtime if runtime is not None else global_runtime()
+        dims = dims_of(op, tuple(x.shape for x in operands))
+        knob = rt.select_or_default(op, dims, DTYPE_BYTES(operands[0].dtype),
+                                    be.default_knob(op), backend=be.name)
+    return be.execute(op, operands, knob, **kw)

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 __all__ = ["syrk_pallas", "syr2k_pallas"]
 
 
@@ -102,7 +104,7 @@ def syrk_pallas(a, c=None, *, bm: int = 128, bk: int = 128,
         out_specs=pl.BlockSpec((bm, bm), lambda i, j, l: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n, n), a.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bm), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, a, c)
@@ -138,7 +140,7 @@ def syr2k_pallas(a, b, c=None, *, bm: int = 128, bk: int = 128,
         out_specs=pl.BlockSpec((bm, bm), lambda i, j, l: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n, n), a.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bm), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b, b, a, c)

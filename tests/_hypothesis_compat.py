@@ -1,0 +1,24 @@
+"""Optional-hypothesis shim: property sweeps skip cleanly when the dep is
+absent (it is a test extra, see pyproject.toml), the rest of the module runs.
+
+    from _hypothesis_compat import given, settings, st
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    class _NoStrategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _NoStrategies()
+
+    def given(*a, **k):
+        return lambda fn: pytest.mark.skip("hypothesis not installed")(fn)
+
+    def settings(*a, **k):
+        return lambda fn: fn
+
+__all__ = ["given", "settings", "st"]

@@ -1,0 +1,218 @@
+"""Tests for the pluggable multi-backend execution layer: registry
+round-trips (save → load → identical per-backend decisions), fallback-chain
+dispatch, per-backend runtime stats, and runtime thread safety."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.backends import (Backend, available_backends, fallback_chain,
+                            get_backend, register_backend, resolve_backend,
+                            unregister_backend)
+from repro.core import (AdsalaRuntime, ModelRegistry, install_backend,
+                        install_subroutine)
+from repro.kernels import ops, ref
+
+
+@pytest.fixture(scope="module")
+def tuned():
+    """Miniature real installs for two backends through install_backend."""
+    out = {}
+    for name in ("cpu_blocked", "ref"):
+        be = get_backend(name)
+        out[name] = install_backend(
+            be, ops=("gemm",), sizes=(32, 64),
+            n_samples=16, dim_lo=32, dim_hi=128,
+            max_footprint_bytes=1_000_000, tune_trials=1, seed=0,
+            candidates=("LinearRegression", "DecisionTree"))["gemm"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# protocol + registry basics
+# ---------------------------------------------------------------------------
+
+def test_builtin_backends_registered():
+    assert {"pallas", "cpu_blocked", "ref"} <= set(available_backends())
+
+
+def test_backends_execute_matches_ref():
+    for name in ("pallas", "cpu_blocked"):
+        be = get_backend(name)
+        for op in ("gemm", "trsm"):
+            dims = (48, 32, 40) if op == "gemm" else (48, 40)
+            operands = be.make_operands(op, dims, np.float32, seed=3)
+            got = np.asarray(be.execute(op, be.prepare(operands),
+                                        be.default_knob(op)))
+            want = np.asarray(ref.REFS[op](*operands))
+            err = np.max(np.abs(got - want)) / (np.max(np.abs(want)) + 1e-9)
+            assert err < 5e-4, (name, op, err)
+
+
+def test_default_knob_is_max_parallelism():
+    be = get_backend("cpu_blocked")
+    space = be.knob_space("gemm")
+    d = be.default_knob("gemm").dict
+    assert d["bm"] == min(k.dict["bm"] for k in space)
+    assert d["bn"] == min(k.dict["bn"] for k in space)
+
+
+def test_fallback_chain_resolution():
+    assert fallback_chain("nope") == ("nope", "ref")
+    assert fallback_chain("ref") == ("ref",)
+    assert resolve_backend("nope").name == "ref"
+    assert resolve_backend(None).name == "ref"
+    assert resolve_backend("cpu_blocked").name == "cpu_blocked"
+    # unavailable backends are skipped in favour of ref
+
+    class Dead(Backend):
+        name = "dead"
+
+        def is_available(self):
+            return False
+
+        def knob_space(self, op, *, sizes=None):
+            return get_backend("ref").knob_space(op)
+
+        def execute(self, op, operands, knob=None, **kw):
+            raise AssertionError("must never execute")
+
+    register_backend(Dead())
+    try:
+        assert resolve_backend("dead").name == "ref"
+    finally:
+        unregister_backend("dead")
+
+
+def test_run_op_falls_back_to_ref_for_unregistered_backend():
+    operands = get_backend("ref").make_operands("gemm", (32, 24, 40),
+                                                np.float32, seed=5)
+    got = np.asarray(ops.run_op("gemm", operands, backend="not_a_backend"))
+    want = np.asarray(ref.gemm(*operands))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError):
+        register_backend(get_backend("ref"))
+
+
+# ---------------------------------------------------------------------------
+# persistence: backend-tagged round-trip
+# ---------------------------------------------------------------------------
+
+def test_registry_roundtrip_identical_decisions_per_backend(tuned, tmp_path):
+    reg = ModelRegistry(tmp_path)
+    for sub in tuned.values():
+        path = reg.save(sub)
+        assert path.name.startswith(f"{sub.backend}__")
+    assert reg.backends() == ("cpu_blocked", "ref")
+
+    rt = AdsalaRuntime()
+    assert reg.load_into(rt) == 2
+    assert rt.backends() == ("cpu_blocked", "ref")
+    for name, sub in tuned.items():
+        for dims in [(48, 48, 48), (96, 64, 128), (128, 128, 128)]:
+            assert rt.select("gemm", dims, dtype_bytes=4,
+                             backend=name) == sub.select(dims)
+
+
+def test_registry_backend_filter(tuned, tmp_path):
+    reg = ModelRegistry(tmp_path)
+    for sub in tuned.values():
+        reg.save(sub)
+    rt = AdsalaRuntime()
+    assert reg.load_into(rt, backend="ref") == 1
+    assert rt.backends() == ("ref",)
+    assert not rt.has("gemm", 4, backend="cpu_blocked")
+
+
+def test_legacy_untagged_artifact_loads_as_pallas(tmp_path):
+    from repro.core.registry import load_subroutine, pack_state
+
+    space = ops.knob_space_for("gemm", sizes=(32, 64))
+    sub = install_subroutine(
+        "gemm", space, lambda dims, knob: 1e-3, n_samples=12,
+        dim_lo=32, dim_hi=64, max_footprint_bytes=1_000_000,
+        tune_trials=1, candidates=("LinearRegression",), use_lof=False)
+    state = sub.get_state()
+    del state["backend"], state["version"]      # what a v1 writer produced
+    p = tmp_path / "gemm_b4.adsala"
+    p.write_bytes(pack_state(state))
+    loaded = load_subroutine(p)
+    assert loaded.backend == "pallas"
+    rt = AdsalaRuntime()
+    rt.register(loaded)
+    assert rt.has("gemm", 4, backend="pallas")
+
+
+# ---------------------------------------------------------------------------
+# runtime: per-backend keying, stats, thread safety
+# ---------------------------------------------------------------------------
+
+def test_same_op_different_backends_coexist(tuned):
+    rt = AdsalaRuntime()
+    for sub in tuned.values():
+        rt.register(sub)
+    k_cpu = rt.select("gemm", (64, 64, 64), dtype_bytes=4,
+                      backend="cpu_blocked")
+    k_ref = rt.select("gemm", (64, 64, 64), dtype_bytes=4, backend="ref")
+    # the ref backend's space has a single candidate; cpu has many
+    assert k_ref == tuned["ref"].knob_space.candidates[0]
+    assert k_cpu in tuned["cpu_blocked"].knob_space.candidates
+
+
+def test_select_or_default_records_stats(tuned):
+    rt = AdsalaRuntime()
+    rt.register(tuned["cpu_blocked"])
+    default = get_backend("cpu_blocked").default_knob("gemm")
+    # untuned backend → default path, still counted
+    got = rt.select_or_default("gemm", (64, 64, 64), 4, default,
+                               backend="pallas")
+    assert got == default
+    assert rt.stats.calls == 1 and rt.stats.default_calls == 1
+    assert rt.stats.backends["pallas"].default_calls == 1
+    # tuned backend → model path, hit on the repeat
+    rt.select_or_default("gemm", (64, 64, 64), 4, default,
+                         backend="cpu_blocked")
+    rt.select_or_default("gemm", (64, 64, 64), 4, default,
+                         backend="cpu_blocked")
+    assert rt.stats.calls == 3 and rt.stats.default_calls == 1
+    b = rt.stats.backends["cpu_blocked"]
+    assert (b.calls, b.cache_hits, b.default_calls) == (2, 1, 0)
+    assert rt.stats.backend_hit_rates["cpu_blocked"] == 0.5
+    assert rt.stats.backend_hit_rates["pallas"] == 0.0
+
+
+def test_concurrent_select_no_cache_corruption(tuned):
+    rt = AdsalaRuntime(cache_size=8)
+    for sub in tuned.values():
+        rt.register(sub)
+    dims_pool = [(32 * i, 32 * i, 32 * i) for i in range(1, 7)]
+    expected = {(name, dims): sub.select(dims)
+                for name, sub in tuned.items() for dims in dims_pool}
+    errors = []
+    n_threads, n_iters = 8, 60
+
+    def worker(tid):
+        try:
+            for i in range(n_iters):
+                name = ("cpu_blocked", "ref")[(tid + i) % 2]
+                dims = dims_pool[(tid * 7 + i) % len(dims_pool)]
+                got = rt.select("gemm", dims, dtype_bytes=4, backend=name)
+                if got != expected[(name, dims)]:
+                    errors.append((name, dims, got))
+        except Exception as e:   # noqa: BLE001
+            errors.append(repr(e))
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors[:5]
+    assert rt.cache_len() <= 8
+    assert rt.stats.calls == n_threads * n_iters
+    assert rt.stats.cache_hits + rt.stats.default_calls <= rt.stats.calls
