@@ -1,0 +1,322 @@
+#!/usr/bin/env python
+"""Serving-layer load harness: batched (shape-bucketed) vs per-call dispatch.
+
+Generates Zipf-distributed traffic over a pool of repeated GEMM-family
+shapes — the serving regime the bucketing scheduler targets — and drives it
+through two paths:
+
+  unbatched  every request is its own ``run_op`` call on a bounded thread
+             pool (the PR-1 dispatch path);
+  batched    requests go through :class:`repro.serving.BlasService`, which
+             stacks same-shape requests and executes each bucket as one
+             stacked ``run_op`` call.
+
+Arrivals are open-loop: the generator follows a Poisson schedule at
+``--rate`` req/s independent of completion (rate 0 = saturation: submit as
+fast as possible, which is the throughput-comparison mode).  Reports p50/p99
+latency, throughput, mean batch size, and the batched/unbatched speedup.
+
+With ``--warm-start`` the harness also mini-installs a tuned model set,
+serves the traffic cold (counting ML model evaluations), persists the
+decision cache, then re-serves the same shapes on a fresh warm-started
+runtime and asserts it performed ZERO model evaluations.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py --quick
+    PYTHONPATH=src python benchmarks/serve_bench.py --requests 2000 \
+        --max-batch 32 --rate 0 --backend ref
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+import threading
+import time
+
+import os
+
+# the harness is dispatch-bound across threads; the GIL switch interval
+# shapes how long the submit loop and the execution threads can hold the
+# interpreter — tune via env to study the tradeoff (seconds)
+sys.setswitchinterval(float(os.environ.get("SERVE_BENCH_SWITCH", "2e-3")))
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import AdsalaRuntime, ModelRegistry, install_backend  # noqa: E402
+from repro.kernels.cpu_blocked import make_operands  # noqa: E402
+from repro.kernels.ops import run_op  # noqa: E402
+from repro.serving import BlasService, ServeConfig  # noqa: E402
+
+
+def make_shape_pool(op: str, n_shapes: int, lo: int, hi: int,
+                    seed: int) -> list[tuple[int, ...]]:
+    """Distinct dims tuples for ``op``; ranks 0..n-1 order the Zipf law."""
+    rng = np.random.default_rng(seed)
+    ndims = 3 if op == "gemm" else 2
+    pool: list[tuple[int, ...]] = []
+    seen = set()
+    while len(pool) < n_shapes:
+        dims = tuple(int(rng.integers(lo // 16, hi // 16 + 1)) * 16
+                     for _ in range(ndims))
+        if dims not in seen:
+            seen.add(dims)
+            pool.append(dims)
+    return pool
+
+
+def zipf_schedule(pool_size: int, n_requests: int, a: float,
+                  seed: int) -> np.ndarray:
+    """Request → shape-rank assignment, p(rank r) ∝ 1/(r+1)^a."""
+    p = 1.0 / np.arange(1, pool_size + 1) ** a
+    p /= p.sum()
+    rng = np.random.default_rng(seed + 1)
+    return rng.choice(pool_size, size=n_requests, p=p)
+
+
+def arrival_times(n: int, rate: float, seed: int) -> np.ndarray:
+    """Open-loop Poisson arrival offsets (seconds); zeros when saturating."""
+    if rate <= 0:
+        return np.zeros(n)
+    rng = np.random.default_rng(seed + 2)
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def percentiles(lat: list[float]) -> tuple[float, float]:
+    arr = np.asarray(lat)
+    return float(np.percentile(arr, 50)), float(np.percentile(arr, 99))
+
+
+def build_traffic(op: str, args) -> list[tuple]:
+    pool = make_shape_pool(op, args.shapes, args.dim_lo, args.dim_hi,
+                           args.seed)
+    ranks = zipf_schedule(len(pool), args.requests, args.zipf_a, args.seed)
+    # one operand set per distinct shape — traffic repeats payloads, which
+    # is fine: the harness measures dispatch, not arithmetic variety
+    payload = {dims: make_operands(op, dims, np.float32,
+                                   seed=hash(dims) % (2 ** 31))
+               for dims in pool}
+    return [(op, pool[r], payload[pool[r]]) for r in ranks]
+
+
+def warm_jax(traffic, backend: str, runtime, max_batch: int) -> None:
+    """Execute each distinct shape once per canonical stack width (the
+    power-of-two widths the service pads buckets to) so XLA compile time
+    stays out of the measured window for BOTH paths."""
+    widths = [1]
+    while widths[-1] < max_batch:
+        widths.append(min(widths[-1] * 2, max_batch))
+    done = set()
+    for op, dims, operands in traffic:
+        if (op, dims) in done:
+            continue
+        done.add((op, dims))
+        run_op(op, operands, backend=backend, runtime=runtime)
+        for width in widths:
+            stacked = tuple(np.stack([x] * width) for x in operands)
+            run_op(op, stacked, backend=backend, runtime=runtime,
+                   stacked=True)
+
+
+def _drive(traffic, args, submit_one, wait_all):
+    """Open-loop load generation: the generator follows the Poisson arrival
+    schedule (``--rate`` req/s; 0 = no pacing, i.e. saturation) regardless
+    of completions.  Latency = scheduled arrival → completion.  Returns
+    (wall_s to last completion, per-request latencies)."""
+    arrivals = arrival_times(len(traffic), args.rate, args.seed)
+    done_at: list[float] = [0.0] * len(traffic)
+    t0 = time.perf_counter()
+    for i, (op, _dims, operands) in enumerate(traffic):
+        now = time.perf_counter() - t0
+        if arrivals[i] > now:
+            time.sleep(arrivals[i] - now)
+        submit_one(i, op, operands, done_at)
+    wait_all()
+    # Future.result() can return before the done-callback that stamps
+    # done_at has run (set_result notifies waiters first) — wait the
+    # stragglers out before reading the timeline
+    while not all(done_at):
+        time.sleep(0.001)
+    wall = max(done_at) - t0
+    lat = [done_at[i] - (t0 + arrivals[i]) for i in range(len(traffic))]
+    return wall, lat
+
+
+def bench_unbatched(traffic, args, runtime) -> dict:
+    pool = ThreadPoolExecutor(max_workers=args.workers)
+    pending = []
+
+    def submit_one(i, op, operands, done_at):
+        def one():
+            run_op(op, operands, backend=args.backend, runtime=runtime)
+            done_at[i] = time.perf_counter()
+        pending.append(pool.submit(one))
+
+    def wait_all():
+        for f in pending:
+            f.result()
+
+    wall, lat = _drive(traffic, args, submit_one, wait_all)
+    pool.shutdown()
+    p50, p99 = percentiles(lat)
+    return {"mode": "unbatched", "wall_s": wall,
+            "throughput_rps": len(traffic) / wall,
+            "p50_ms": p50 * 1e3, "p99_ms": p99 * 1e3, "mean_batch": 1.0}
+
+
+def bench_batched(traffic, args, runtime, registry=None) -> dict:
+    cfg = ServeConfig(backend=args.backend, max_batch=args.max_batch,
+                      linger_ms=args.linger_ms, workers=args.workers,
+                      max_pending=args.max_pending)
+    svc = BlasService(runtime=runtime, config=cfg, registry=registry)
+    futs = []
+
+    def submit_one(i, op, operands, done_at):
+        # done-callback fires in the worker at true completion time — the
+        # unbatched path records at completion too, so p50/p99 compare fair
+        f = svc.submit(op, operands)
+        f.add_done_callback(
+            lambda _f, i=i: done_at.__setitem__(i, time.perf_counter()))
+        futs.append(f)
+
+    def wait_all():
+        for f in futs:
+            f.result()
+
+    wall, lat = _drive(traffic, args, submit_one, wait_all)
+    stats = svc.stats
+    svc.close()
+    p50, p99 = percentiles(lat)
+    return {"mode": "batched", "wall_s": wall,
+            "throughput_rps": len(traffic) / wall,
+            "p50_ms": p50 * 1e3, "p99_ms": p99 * 1e3,
+            "mean_batch": stats.mean_batch, "max_batch": stats.max_batch,
+            "batches": stats.batches}
+
+
+def report(row: dict) -> None:
+    extra = "".join(
+        f"  {k.split('_')[0]}={row[k]:.1f}" for k in ("mean_batch",)
+        if k in row)
+    print(f"[serve_bench] {row['mode']:>9}: {row['throughput_rps']:8.1f} "
+          f"req/s  p50={row['p50_ms']:7.2f} ms  p99={row['p99_ms']:7.2f} ms"
+          f"{extra}")
+
+
+def warm_start_check(args) -> bool:
+    """Cold-serve, persist decision cache, warm-serve: assert 0 model evals."""
+    from repro.backends import get_backend
+    op = args.op
+    print("[serve_bench] warm-start: mini-installing tuned "
+          f"{args.backend}/{op} model ...")
+    with tempfile.TemporaryDirectory() as td:
+        registry = ModelRegistry(td)
+        install_backend(get_backend(args.backend), ops=(op,),
+                        n_samples=16, dim_lo=32, dim_hi=128,
+                        max_footprint_bytes=1_000_000, tune_trials=1,
+                        candidates=("LinearRegression", "DecisionTree"),
+                        registry=registry, seed=args.seed)
+        traffic = build_traffic(op, args)
+
+        cold_rt = AdsalaRuntime()
+        registry.load_into(cold_rt)
+        with BlasService(runtime=cold_rt, registry=registry,
+                         config=ServeConfig(backend=args.backend)) as svc:
+            for op_, _dims, operands in traffic:
+                svc.submit(op_, operands)
+            svc.drain()
+        cold_evals = cold_rt.stats.model_evals
+        print(f"[serve_bench] cold run:  {cold_evals} model evaluations "
+              f"({len(traffic)} requests)")
+
+        warm_rt = AdsalaRuntime()
+        registry.load_into(warm_rt)
+        with BlasService(runtime=warm_rt, registry=registry,
+                         config=ServeConfig(backend=args.backend)) as svc:
+            print(f"[serve_bench] warm run:  imported "
+                  f"{svc.warm_started} cached decisions")
+            for op_, _dims, operands in traffic:
+                svc.submit(op_, operands)
+            svc.drain()
+        warm_evals = warm_rt.stats.model_evals
+        print(f"[serve_bench] warm run:  {warm_evals} model evaluations")
+        ok = cold_evals > 0 and warm_evals == 0
+        print(f"[serve_bench] warm-start: "
+              f"{'ok' if ok else 'FAILED (expected cold>0, warm==0)'}")
+        return ok
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--op", default="gemm", choices=(
+        "gemm", "symm", "syrk", "syr2k", "trmm", "trsm"))
+    p.add_argument("--backend", default="ref",
+                   help="execution backend (default ref: the always-"
+                        "available jnp path; pallas interpret-mode is slow)")
+    p.add_argument("--requests", type=int, default=800)
+    p.add_argument("--shapes", type=int, default=8,
+                   help="distinct shapes in the Zipf pool")
+    p.add_argument("--zipf-a", type=float, default=1.5)
+    p.add_argument("--rate", type=float, default=0.0,
+                   help="open-loop arrival rate req/s (0 = saturation)")
+    p.add_argument("--dim-lo", type=int, default=32)
+    p.add_argument("--dim-hi", type=int, default=128)
+    p.add_argument("--max-batch", type=int, default=32)
+    p.add_argument("--linger-ms", type=float, default=10.0)
+    p.add_argument("--workers", type=int, default=2)
+    p.add_argument("--max-pending", type=int, default=4096)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--repeats", type=int, default=3,
+                   help="measurement repeats per mode; the median-throughput "
+                        "run is reported (thread-scheduling phase effects "
+                        "make single runs noisy on small hosts)")
+    p.add_argument("--quick", action="store_true",
+                   help="small preset for CI smoke (200 requests)")
+    p.add_argument("--warm-start", action="store_true",
+                   help="also run the decision-cache warm-start check")
+    p.add_argument("--min-speedup", type=float, default=None,
+                   help="exit nonzero unless batched/unbatched >= this")
+    args = p.parse_args(argv)
+    if args.quick:
+        args.requests = min(args.requests, 400)
+        args.shapes = min(args.shapes, 6)
+
+    traffic = build_traffic(args.op, args)
+    print(f"[serve_bench] {args.requests} {args.op} requests over "
+          f"{args.shapes} Zipf(a={args.zipf_a}) shapes, backend="
+          f"{args.backend}, rate="
+          f"{'saturation' if args.rate <= 0 else f'{args.rate}/s'}")
+    runtime = AdsalaRuntime()
+    warm_jax(traffic, args.backend, runtime, args.max_batch)
+
+    def median_run(fn):
+        rows = [fn(traffic, args, AdsalaRuntime())
+                for _ in range(max(1, args.repeats))]
+        rows.sort(key=lambda r: r["throughput_rps"])
+        return rows[len(rows) // 2]
+
+    un = median_run(bench_unbatched)
+    report(un)
+    ba = median_run(bench_batched)
+    report(ba)
+    speedup = ba["throughput_rps"] / max(un["throughput_rps"], 1e-9)
+    print(f"[serve_bench] batched/unbatched throughput: {speedup:.2f}x "
+          f"(mean batch {ba['mean_batch']:.1f}, "
+          f"median of {max(1, args.repeats)})")
+
+    ok = True
+    if args.warm_start:
+        ok = warm_start_check(args) and ok
+    if args.min_speedup is not None and speedup < args.min_speedup:
+        print(f"[serve_bench] FAILED: speedup {speedup:.2f}x < "
+              f"{args.min_speedup}x")
+        ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,10 +1,11 @@
 #!/usr/bin/env python
 """CI/tooling smoke check for the multi-backend execution layer.
 
-Enumerates every registered backend, runs one tiny instance of each of its
-ops through the shared ``Backend`` protocol, and compares the result against
-the ``ref`` backend (pure-jnp oracle).  Exits nonzero on any mismatch or
-execution failure — runnable in CI and locally:
+Thin CLI wrapper over :mod:`repro.backends.conformance` — the same harness
+the pytest suite (``tests/test_backend_conformance.py``) parametrizes over.
+Enumerates every registered backend, runs each of its ops (single and
+stacked) in both dtypes against the float64 numpy oracle, and exits nonzero
+on any mismatch or execution failure:
 
     PYTHONPATH=src python scripts/check_backends.py
     PYTHONPATH=src python scripts/check_backends.py --backends pallas,ref
@@ -20,27 +21,18 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np  # noqa: E402
 
-from repro.backends import available_backends, get_backend  # noqa: E402
-
-#: tiny, deliberately non-block-aligned dims (exercise the padding paths)
-DIMS = {"gemm": (48, 32, 40), "symm": (48, 40), "syrk": (48, 32),
-        "syr2k": (48, 32), "trmm": (48, 40), "trsm": (48, 40)}
-
-REL_TOL = 5e-4   # float32 accumulation-order differences across backends
-
-
-def rel_err(got, want) -> float:
-    got = np.asarray(got, np.float64)
-    want = np.asarray(want, np.float64)
-    return float(np.max(np.abs(got - want)) /
-                 (np.max(np.abs(want)) + 1e-9))
+from repro.backends import available_backends  # noqa: E402
+from repro.backends.conformance import run_conformance  # noqa: E402
 
 
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--backends", default="",
                    help="comma list; default = all registered")
-    p.add_argument("--tol", type=float, default=REL_TOL)
+    p.add_argument("--tol", type=float, default=None,
+                   help="override the per-dtype tolerance for every cell")
+    p.add_argument("--stacked-width", type=int, default=3,
+                   help="also check execute_stacked at this width (0 = off)")
     args = p.parse_args(argv)
 
     names = tuple(b for b in args.backends.split(",") if b) \
@@ -50,35 +42,19 @@ def main(argv=None) -> int:
         print(f"[check_backends] unknown backend(s) {unknown}; "
               f"registered: {', '.join(available_backends())}")
         return 2
-    ref = get_backend("ref")
+    results = run_conformance(names, tol=args.tol,
+                              dtypes=(np.float32, np.float64),
+                              stacked_width=args.stacked_width)
     failures = 0
-    for name in names:
-        be = get_backend(name)
-        if not be.is_available():
-            print(f"[check_backends] {name}: SKIP (unavailable on host)")
-            continue
-        for op in be.ops():
-            dims = DIMS[op]
-            # same seed everywhere → identical problem instance per backend
-            operands = be.make_operands(op, dims, np.float32, seed=0)
-            want = np.asarray(ref.execute(op, operands))
-            try:
-                got = np.asarray(be.execute(op, be.prepare(operands),
-                                            be.default_knob(op)))
-            except Exception as e:   # noqa: BLE001
-                print(f"[check_backends] {name}:{op} ERROR "
-                      f"{type(e).__name__}: {e}")
-                failures += 1
-                continue
-            err = rel_err(got, want)
-            ok = got.shape == want.shape and err < args.tol
-            print(f"[check_backends] {name}:{op} dims={dims} "
-                  f"relerr={err:.2e} {'ok' if ok else 'MISMATCH'}")
-            failures += 0 if ok else 1
+    for r in results:
+        print(f"[check_backends] {r.line()}")
+        if not (r.ok or r.skipped):
+            failures += 1
     if failures:
         print(f"[check_backends] FAILED: {failures} mismatch(es)")
         return 1
-    print(f"[check_backends] all backends match ref ({', '.join(names)})")
+    print(f"[check_backends] all backends match the oracle "
+          f"({', '.join(names)})")
     return 0
 
 

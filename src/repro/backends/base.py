@@ -51,12 +51,24 @@ class Backend(abc.ABC):
     #: then skips its pre-selection and forwards the runtime through
     selects_own_knob: bool = False
 
+    #: True when execute_stacked compiles one executable per batch width —
+    #: the serving layer then pads buckets to canonical widths to bound the
+    #: compile set.  Loop-based backends gain nothing from padding (the
+    #: filler rows would just run as extra full ops), so they leave it False.
+    jit_stacked: bool = False
+
     # -- capability ----------------------------------------------------------
     def ops(self) -> tuple[str, ...]:
         return L3_OPS
 
     def is_available(self) -> bool:
         """Whether this backend can execute on the current host."""
+        return True
+
+    def supports_dtype(self, dtype) -> bool:
+        """Whether this backend executes ``dtype`` at full precision (the
+        conformance gate skips unsupported combinations instead of holding
+        them to a tolerance they cannot meet)."""
         return True
 
     # -- knob space ----------------------------------------------------------
@@ -78,6 +90,21 @@ class Backend(abc.ABC):
                 **kw):
         """Run ``op`` on ``operands`` under ``knob`` (backend default if
         ``None``); returns the result array."""
+
+    def execute_stacked(self, op: str, operands: tuple,
+                        knob: Knob | None = None, **kw):
+        """Run ``op`` over operands carrying a leading batch axis — the
+        serving layer's bucket-execution primitive (all requests in a bucket
+        share dims/dtype, so one knob covers the whole stack).
+
+        The base implementation unstacks, loops :meth:`execute`, and
+        restacks; backends that can execute a stack natively (vmap, batched
+        BLAS, strided GEMM) override this with the one-call version.
+        """
+        batch = int(operands[0].shape[0])
+        outs = [self.execute(op, tuple(x[i] for x in operands), knob, **kw)
+                for i in range(batch)]
+        return np.stack([np.asarray(o) for o in outs])
 
     def make_operands(self, op: str, dims: tuple[int, ...],
                       dtype=np.float32, seed: int = 0) -> tuple:

@@ -28,6 +28,7 @@ def _host_has_tpu() -> bool:
 class PallasBackend(Backend):
     name = "pallas"
     selects_own_knob = True     # ops.py selects at jit trace time
+    jit_stacked = True          # vmap compiles per (shape, width)
 
     def __init__(self, *, interpret: bool | None = None) -> None:
         self.interpret = (not _host_has_tpu()) if interpret is None \
@@ -37,6 +38,10 @@ class PallasBackend(Backend):
                    sizes: tuple[int, ...] | None = None) -> KnobSpace:
         from repro.kernels.ops import knob_space_for
         return knob_space_for(op, sizes=tuple(sizes) if sizes else None)
+
+    def supports_dtype(self, dtype) -> bool:
+        from .ref import _jax_supports
+        return _jax_supports(dtype)
 
     def default_knob(self, op: str) -> Knob:
         from repro.kernels.ops import default_knob
@@ -50,3 +55,15 @@ class PallasBackend(Backend):
         from repro.kernels.ops import PALLAS_OPS
         kw.setdefault("interpret", self.interpret)
         return PALLAS_OPS[op](*operands, knob=knob, **kw)
+
+    def execute_stacked(self, op: str, operands: tuple,
+                        knob: Knob | None = None, **kw):
+        import jax
+        from repro.kernels.ops import PALLAS_OPS
+        kw.setdefault("interpret", self.interpret)
+        fn = PALLAS_OPS[op]
+        # vmap lifts the 2-D kernel over the batch axis (pallas_call has a
+        # batching rule: the stack becomes one extra grid dimension); the
+        # knob decision runs once at trace time for the whole stack
+        return jax.vmap(lambda *xs: fn(*xs, knob=knob, **kw))(
+            *(jnp.asarray(x) for x in operands))

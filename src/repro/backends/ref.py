@@ -8,6 +8,8 @@ backend exercises the same code paths with K=1).
 
 from __future__ import annotations
 
+import numpy as np
+
 from repro.core.knobs import Knob, KnobSpace, _grid_parallelism
 
 from .base import Backend
@@ -15,8 +17,28 @@ from .base import Backend
 __all__ = ["RefBackend"]
 
 
+def _jax_supports(dtype) -> bool:
+    """64-bit floats silently degrade to f32 under jax's default config —
+    report them unsupported rather than serving degraded precision."""
+    if np.dtype(dtype).itemsize < 8:
+        return True
+    try:
+        import jax
+        return bool(jax.config.jax_enable_x64)
+    except Exception:
+        return False
+
+
 class RefBackend(Backend):
     name = "ref"
+    jit_stacked = True      # one jitted executable per (shape, width)
+
+    def __init__(self) -> None:
+        # jitted executors keyed (op, scalar kwargs); jax.jit then re-caches
+        # per operand shape.  One XLA dispatch per call instead of one per
+        # jnp expression — this is what makes the serving path's "one stacked
+        # launch per bucket" an actual single launch.
+        self._jitted: dict = {}
 
     def knob_space(self, op: str, *,
                    sizes: tuple[int, ...] | None = None) -> KnobSpace:
@@ -26,8 +48,33 @@ class RefBackend(Backend):
                            "variant": "full"}],
                          parallelism_fn=_grid_parallelism)
 
+    def supports_dtype(self, dtype) -> bool:
+        return _jax_supports(dtype)
+
+    #: bound on distinct (op, scalar-kwargs) executables kept around —
+    #: per-request scaling factors must not grow the cache without limit
+    _JIT_CACHE_MAX = 256
+
+    def _executor(self, op: str, kw: dict):
+        key = (op, tuple(sorted(kw.items())))
+        fn = self._jitted.get(key)
+        if fn is None:
+            import jax
+            from repro.kernels.ref import REFS
+            ref_fn = REFS[op]
+            if len(self._jitted) >= self._JIT_CACHE_MAX:
+                self._jitted.clear()
+            fn = self._jitted.setdefault(
+                key, jax.jit(lambda *xs: ref_fn(*xs, **kw)))
+        return fn
+
     def execute(self, op: str, operands: tuple, knob: Knob | None = None,
                 **kw):
-        from repro.kernels.ref import REFS
         kw.pop("interpret", None)   # oracle has no kernel-mode switch
-        return REFS[op](*operands, **kw)
+        return self._executor(op, kw)(*operands)
+
+    def execute_stacked(self, op: str, operands: tuple,
+                        knob: Knob | None = None, **kw):
+        # the jnp oracles broadcast over leading axes (matmul/tril/solve are
+        # all batch-aware), so a stack executes as one jitted XLA call
+        return self.execute(op, operands, knob, **kw)

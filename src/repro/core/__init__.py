@@ -20,7 +20,7 @@ from .preprocess import PreprocessPipeline, YeoJohnsonTransformer
 from .lof import lof_scores, remove_outliers
 from .selection import ModelReport, evaluate_candidates, select_best
 from .tuner import TunedSubroutine, install_backend, install_subroutine
-from .runtime import (AdsalaRuntime, BackendStats, RuntimeStats,
+from .runtime import (AdsalaRuntime, BackendStats, BucketStats, RuntimeStats,
                       global_runtime)
 from .registry import (ModelRegistry, load_subroutine, pack_state,
                        save_subroutine, unpack_state)
@@ -34,7 +34,7 @@ __all__ = [
     "PreprocessPipeline", "YeoJohnsonTransformer", "lof_scores",
     "remove_outliers", "ModelReport", "evaluate_candidates", "select_best",
     "TunedSubroutine", "install_subroutine", "install_backend",
-    "AdsalaRuntime", "BackendStats", "RuntimeStats",
+    "AdsalaRuntime", "BackendStats", "BucketStats", "RuntimeStats",
     "global_runtime", "ModelRegistry", "load_subroutine", "pack_state",
     "save_subroutine", "unpack_state", "DistilledTree",
 ]

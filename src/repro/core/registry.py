@@ -10,6 +10,7 @@ across Python versions and safe to load.  Writes are atomic
 
 from __future__ import annotations
 
+import json
 import os
 import tempfile
 from pathlib import Path
@@ -156,3 +157,31 @@ class ModelRegistry:
         for s in subs:
             runtime.register(s)
         return len(subs)
+
+    # -- warm-start decision cache -------------------------------------------
+    #: filename of the persisted runtime decision cache (beside the models)
+    DECISION_CACHE = "decision_cache.json"
+
+    @property
+    def decision_cache_path(self) -> Path:
+        return self.root / self.DECISION_CACHE
+
+    def save_decision_cache(self, runtime) -> Path:
+        """Persist the runtime's LRU decision cache beside the artifacts so a
+        restarted server warm-starts past the cold model evaluations."""
+        payload = {"version": 1, "entries": runtime.export_cache()}
+        _atomic_write(self.decision_cache_path,
+                      json.dumps(payload, indent=1).encode())
+        return self.decision_cache_path
+
+    def load_decision_cache(self, runtime) -> int:
+        """Warm-start ``runtime`` from a persisted decision cache; returns
+        the number of imported decisions (0 when no cache file exists)."""
+        path = self.decision_cache_path
+        if not path.exists():
+            return 0
+        payload = json.loads(path.read_text())
+        if int(payload.get("version", 1)) != 1:
+            raise ValueError(f"{path}: unknown decision-cache version "
+                             f"{payload.get('version')!r}")
+        return runtime.import_cache(payload["entries"])

@@ -24,8 +24,8 @@ import time
 from .knobs import Knob
 from .tuner import TunedSubroutine
 
-__all__ = ["AdsalaRuntime", "BackendStats", "RuntimeStats", "global_runtime",
-           "DEFAULT_BACKEND"]
+__all__ = ["AdsalaRuntime", "BackendStats", "BucketStats", "RuntimeStats",
+           "global_runtime", "DEFAULT_BACKEND"]
 
 #: backend assumed when a caller or a legacy (v1) artifact names none
 DEFAULT_BACKEND = "pallas"
@@ -36,6 +36,8 @@ class BackendStats:
     calls: int = 0
     cache_hits: int = 0
     default_calls: int = 0      # select_or_default served the fallback knob
+    model_evals: int = 0        # knob decisions that ran the ML model
+    eval_seconds: float = 0.0
 
     @property
     def hit_rate(self) -> float:
@@ -43,16 +45,36 @@ class BackendStats:
 
 
 @dataclasses.dataclass
+class BucketStats:
+    """Serving-layer accounting for one shape bucket (= one decision-cache
+    key): how many stacked executions it saw and how well they amortised."""
+    batches: int = 0
+    requests: int = 0
+    max_batch: int = 0
+
+    @property
+    def mean_batch(self) -> float:
+        return self.requests / self.batches if self.batches else 0.0
+
+
+@dataclasses.dataclass
 class RuntimeStats:
     calls: int = 0
     cache_hits: int = 0
     default_calls: int = 0
+    model_evals: int = 0
     eval_seconds: float = 0.0
     backends: dict[str, BackendStats] = dataclasses.field(
+        default_factory=dict)
+    #: per shape-bucket serving stats, keyed (backend, op, dtype_bytes, dims)
+    buckets: dict[tuple, BucketStats] = dataclasses.field(
         default_factory=dict)
 
     def for_backend(self, name: str) -> BackendStats:
         return self.backends.setdefault(name, BackendStats())
+
+    def for_bucket(self, key: tuple) -> BucketStats:
+        return self.buckets.setdefault(key, BucketStats())
 
     @property
     def hit_rate(self) -> float:
@@ -119,7 +141,11 @@ class AdsalaRuntime:
         knob = sub.select(key[3])
         dt = time.perf_counter() - t0
         with self._lock:
+            self.stats.model_evals += 1
             self.stats.eval_seconds += dt
+            bstats = self.stats.for_backend(backend)
+            bstats.model_evals += 1
+            bstats.eval_seconds += dt
             self._cache[key] = knob
             self._cache.move_to_end(key)
             while len(self._cache) > self._cache_size:
@@ -141,6 +167,60 @@ class AdsalaRuntime:
                 bstats.default_calls += 1
                 return default
         return self.select(op, dims, dtype_bytes, backend=backend)
+
+    # -- serving accounting ---------------------------------------------------
+    def record_batch(self, op: str, dims: tuple[int, ...], dtype_bytes: int,
+                     backend: str, batch_size: int) -> None:
+        """Credit one stacked execution of ``batch_size`` requests to the
+        shape bucket keyed like the decision cache (serving layer hook)."""
+        key = (backend, op, dtype_bytes, tuple(int(d) for d in dims))
+        with self._lock:
+            b = self.stats.for_bucket(key)
+            b.batches += 1
+            b.requests += int(batch_size)
+            b.max_batch = max(b.max_batch, int(batch_size))
+
+    # -- warm-start persistence ----------------------------------------------
+    def export_cache(self) -> list[dict]:
+        """Decision-cache contents as JSON-safe records, LRU-oldest first,
+        so a restarted server can skip the cold-start model evaluations."""
+        with self._lock:
+            return [{"backend": k[0], "op": k[1], "dtype_bytes": k[2],
+                     "dims": list(k[3]), "knob": knob.dict}
+                    for k, knob in self._cache.items()]
+
+    def import_cache(self, entries: list[dict]) -> int:
+        """Warm-start the decision cache from :meth:`export_cache` records;
+        returns how many entries were imported.
+
+        Imported decisions count as neither calls nor hits; subsequent
+        ``select`` calls on these shapes are cache hits and run no model.
+        Entries beyond ``cache_size`` evict in the usual LRU order.  Note
+        that ``select_or_default`` still serves its default for subroutines
+        with no registered model, warm cache or not.
+
+        A persisted cache can outlive a recalibration: entries whose knob no
+        longer exists in the *registered* subroutine's candidate space are
+        dropped (stale artifacts must not dictate impossible configs).
+        Entries for unregistered subroutines import as-is — there is no
+        space to validate against yet.
+        """
+        n = 0
+        with self._lock:
+            for e in entries:
+                key = (str(e["backend"]), str(e["op"]), int(e["dtype_bytes"]),
+                       tuple(int(d) for d in e["dims"]))
+                knob = Knob(tuple(sorted(e["knob"].items())))
+                sub = self._subs.get(key[:3])
+                space = getattr(sub, "knob_space", None)
+                if space is not None and knob not in space.candidates:
+                    continue
+                self._cache[key] = knob
+                self._cache.move_to_end(key)
+                n += 1
+            while len(self._cache) > self._cache_size:
+                self._cache.popitem(last=False)
+        return n
 
     def clear_cache(self) -> None:
         with self._lock:

@@ -87,17 +87,22 @@ def default_knob(op: str) -> Knob:
 
 
 def dims_of(op: str, shapes: tuple[tuple[int, ...], ...]) -> tuple[int, ...]:
-    """The subroutine's free dims (paper Table I) from operand shapes."""
+    """The subroutine's free dims (paper Table I) from operand shapes.
+
+    Leading batch axes are ignored: a stacked ``(B, m, k)`` operand yields
+    the same dims as its per-item ``(m, k)`` slice, so stacked and unstacked
+    calls share one decision-cache key.
+    """
     if op == "gemm":
-        (m, k), (_, n) = shapes[0], shapes[1]
+        (m, k), (_, n) = shapes[0][-2:], shapes[1][-2:]
         return (m, k, n)
     if op == "symm":
-        (m, _), (_, n) = shapes[0], shapes[1]
+        (m, _), (_, n) = shapes[0][-2:], shapes[1][-2:]
         return (m, n)
     if op in ("syrk", "syr2k"):
-        (n, k) = shapes[0]
+        (n, k) = shapes[0][-2:]
         return (n, k)
-    (m, _), (_, n) = shapes[0], shapes[1]   # trmm/trsm
+    (m, _), (_, n) = shapes[0][-2:], shapes[1][-2:]   # trmm/trsm
     return (m, n)
 
 
@@ -214,7 +219,8 @@ _OPS = PALLAS_OPS   # back-compat alias
 
 def run_op(op: str, operands: tuple, *, backend: str = "pallas",
            knob: Optional[Knob] = None,
-           runtime: Optional[AdsalaRuntime] = None, **kw):
+           runtime: Optional[AdsalaRuntime] = None,
+           stacked: Optional[bool] = None, **kw):
     """Execute ``op`` through the backend registry.
 
     Dispatch resolves the requested backend with a graceful fallback chain
@@ -222,16 +228,29 @@ def run_op(op: str, operands: tuple, *, backend: str = "pallas",
     yields a correct result.  When no ``knob`` is given the ADSALA runtime
     selects one under the *resolved* backend's key, falling back to that
     backend's default config if it has no tuned model.
+
+    Operands carrying a leading batch axis (``(B, m, k)`` instead of
+    ``(m, k)``) execute as one stacked call via ``Backend.execute_stacked``
+    — all items share dims/dtype, so a single knob decision covers the whole
+    stack.  ``stacked`` forces the interpretation when auto-detection by
+    rank is ambiguous.
     """
     from repro.backends import resolve_backend
     be = resolve_backend(backend)
+    if stacked is None:
+        stacked = getattr(operands[0], "ndim", 2) == 3
     if be.selects_own_knob:
         # the backend's executors resolve the knob themselves (pallas: at
         # jit trace time) — forward the runtime instead of pre-selecting
+        if stacked:
+            return be.execute_stacked(op, operands, knob, runtime=runtime,
+                                      **kw)
         return be.execute(op, operands, knob, runtime=runtime, **kw)
     if knob is None:
         rt = runtime if runtime is not None else global_runtime()
         dims = dims_of(op, tuple(x.shape for x in operands))
         knob = rt.select_or_default(op, dims, DTYPE_BYTES(operands[0].dtype),
                                     be.default_knob(op), backend=be.name)
+    if stacked:
+        return be.execute_stacked(op, operands, knob, **kw)
     return be.execute(op, operands, knob, **kw)

@@ -1,0 +1,13 @@
+"""Asynchronous shape-bucketed BLAS L3 serving on top of the ADSALA runtime.
+
+    BlasService — submit()/call() front-end, scheduler + bounded worker pool
+    ServeConfig — bucket/flush knobs (max_batch, linger_ms, workers, ...)
+    ServeStats  — service-level counters (per-bucket detail on the runtime)
+
+See ``repro/serving/service.py`` for the life-of-a-request diagram and
+``benchmarks/serve_bench.py`` for the batched-vs-unbatched load harness.
+"""
+
+from .service import BlasService, ServeConfig, ServeStats, bucket_key
+
+__all__ = ["BlasService", "ServeConfig", "ServeStats", "bucket_key"]

@@ -1,0 +1,400 @@
+"""Shape-bucketed asynchronous BLAS L3 serving (BLASX-style batching on top
+of the ADSALA runtime).
+
+The paper's runtime (Fig. 1b) decides a knob per *single* call.  Under
+serving traffic the same handful of shapes repeats across many concurrent
+requests, so the profitable unit of work is the *bucket*: all pending
+requests with identical ``(backend, op, dtype_bytes, dims)`` — the same key
+the runtime's decision cache uses — stacked along a new leading axis and
+executed as ONE call through :func:`repro.kernels.ops.run_op`.  One ML knob
+selection then amortises over the whole bucket, and the backend sees a
+single stacked launch instead of B dispatches.
+
+Life of a request::
+
+    submit() ──► bucket[(backend, op, bytes, dims, extra)] ─┐
+                                                            │ full (max_batch)
+    scheduler thread: linger-deadline watch ────────────────┤ or aged (linger)
+                                                            ▼
+    ready queue ──► worker pool (bounded) ──► run_op(stacked) ──► futures
+
+Flush policy is per bucket: a bucket flushes when it holds ``max_batch``
+requests (size trigger, checked at submit) or when its oldest request has
+waited ``linger_ms`` (time trigger, checked by the scheduler thread).
+``max_pending`` bounds the number of in-flight requests — ``submit`` blocks
+once the bound is hit, which is the service's backpressure signal.
+
+The hot submit path stays cheap on purpose: one mutex acquisition, no
+broadcast.  Workers block on the ready *queue* (not a shared condition), the
+scheduler sleeps on an event it only needs when a bucket is *opened*, and
+completion broadcasts fire per batch, not per request.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.runtime import AdsalaRuntime, global_runtime
+
+__all__ = ["BlasService", "ServeConfig", "ServeStats", "bucket_key"]
+
+#: ops the service accepts (import-light mirror of backends.L3_OPS)
+SERVABLE_OPS = ("gemm", "symm", "syrk", "syr2k", "trmm", "trsm")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Bucket/flush knobs of the serving layer."""
+    backend: str = "pallas"       # default execution backend for submit()
+    max_batch: int = 32           # size trigger: flush a full bucket at once
+    linger_ms: float = 2.0        # time trigger: max wait of a bucket's head
+    workers: int = 2              # bounded executor pool size
+    max_pending: int = 1024       # backpressure: submit() blocks beyond this
+    pad_batches: bool = True      # pad stacks to power-of-two widths so jit
+                                  # backends reuse one executable per width
+    min_steal: Optional[int] = None   # smallest bucket an *idle* worker may
+                                  # flush before its linger expires (work-
+                                  # conserving scheduling); None = max_batch/2
+
+    def __post_init__(self) -> None:
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if self.workers < 1:
+            raise ValueError("workers must be >= 1")
+        if self.linger_ms < 0:
+            raise ValueError("linger_ms must be >= 0")
+        if self.max_pending < 1:
+            raise ValueError("max_pending must be >= 1")
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Service-level aggregates; per-bucket detail lives in
+    ``runtime.stats.buckets`` (see :meth:`BlasService.bucket_stats`)."""
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    batches: int = 0
+    max_batch: int = 0
+    padded_items: int = 0         # filler rows added for canonical widths
+    latency_sum: float = 0.0      # submit→result, seconds, completed only
+
+    @property
+    def mean_batch(self) -> float:
+        done = self.completed + self.failed
+        return done / self.batches if self.batches else 0.0
+
+    @property
+    def mean_latency(self) -> float:
+        return self.latency_sum / self.completed if self.completed else 0.0
+
+
+def bucket_key(op: str, shapes: Sequence[tuple[int, ...]], dtypes,
+               backend: str, extra: tuple = ()) -> tuple:
+    """The grouping key: runtime decision-cache key + dtypes + scalar-kwargs.
+
+    Requests in one bucket must be exchangeable under a single stacked call,
+    so anything that changes semantics splits the bucket: the exact dtype
+    *name* of every operand (itemsize alone would stack float32 with int32,
+    and operand 0 alone would miss a mixed-precision second operand — both
+    silently promote under np.stack) and any scalar kwargs (alpha, beta) —
+    two alphas never share a stack.  The first four fields remain the
+    runtime decision-cache key.
+    """
+    from repro.kernels.ops import dims_of
+    names = tuple(np.dtype(d).name for d in dtypes)
+    return (backend, op, int(np.dtype(dtypes[0]).itemsize),
+            dims_of(op, tuple(shapes)), names, extra)
+
+
+@dataclasses.dataclass
+class _Request:
+    op: str
+    operands: tuple
+    kw: dict
+    future: Future
+    t_submit: float
+
+
+class _Bucket:
+    __slots__ = ("key", "requests", "t_head")
+
+    def __init__(self, key: tuple, t_head: float) -> None:
+        self.key = key
+        self.requests: list[_Request] = []
+        self.t_head = t_head          # monotonic enqueue time of the head
+
+
+class BlasService:
+    """Asynchronous shape-bucketed BLAS front-end over an ADSALA runtime.
+
+    ``submit`` returns a :class:`concurrent.futures.Future`; buckets are
+    executed by a bounded worker pool as single stacked ``run_op`` calls.
+    Pass a :class:`~repro.core.registry.ModelRegistry` to warm-start the
+    runtime's decision cache on startup and persist it on ``close`` — a
+    restarted server then re-serves previously seen shapes with zero model
+    evaluations.
+
+    Usage::
+
+        with BlasService(runtime=rt, config=ServeConfig(max_batch=16)) as s:
+            futs = [s.submit("gemm", (a, b)) for a, b in work]
+            outs = [f.result() for f in futs]
+    """
+
+    def __init__(self, *, runtime: Optional[AdsalaRuntime] = None,
+                 config: Optional[ServeConfig] = None,
+                 registry=None) -> None:
+        self.runtime = runtime if runtime is not None else global_runtime()
+        self.config = config if config is not None else ServeConfig()
+        self.registry = registry
+        self.stats = ServeStats()
+        self.warm_started = 0
+        if registry is not None:
+            self.warm_started = registry.load_decision_cache(self.runtime)
+
+        self._mutex = threading.Lock()
+        self._done = threading.Condition(self._mutex)   # batch completions
+        self._buckets: dict[tuple, _Bucket] = {}
+        self._ready: "queue.Queue[Optional[_Bucket]]" = queue.Queue()
+        self._wake = threading.Event()    # scheduler: new bucket opened
+        self._pending = 0                 # submitted, result not yet set
+        self._closed = False
+
+        self._scheduler = threading.Thread(
+            target=self._scheduler_loop, name="blas-serve-scheduler",
+            daemon=True)
+        self._workers = [
+            threading.Thread(target=self._worker_loop,
+                             name=f"blas-serve-worker-{i}", daemon=True)
+            for i in range(self.config.workers)]
+        self._scheduler.start()
+        for w in self._workers:
+            w.start()
+
+    # -- submission -----------------------------------------------------------
+    def submit(self, op: str, operands: tuple, *,
+               backend: Optional[str] = None, **kw) -> Future:
+        """Enqueue one BLAS call; returns a Future resolving to its result.
+
+        Blocks (backpressure) while ``max_pending`` requests are in flight.
+        """
+        if op not in SERVABLE_OPS:
+            raise ValueError(f"unknown op {op!r}; servable: {SERVABLE_OPS}")
+        operands = tuple(np.asarray(x) for x in operands)
+        if any(x.ndim != 2 for x in operands):
+            raise ValueError("submit takes one 2-D problem per request; "
+                             "stacking is the service's job")
+        be = backend or self.config.backend
+        key = bucket_key(op, [x.shape for x in operands],
+                         [x.dtype for x in operands], be,
+                         tuple(sorted(kw.items())))
+        now = time.monotonic()
+        req = _Request(op=op, operands=operands, kw=kw, future=Future(),
+                       t_submit=now)
+        with self._mutex:
+            if self._closed:
+                raise RuntimeError("service is closed")
+            while self._pending >= self.config.max_pending:
+                self._done.wait(0.05)
+                if self._closed:
+                    raise RuntimeError("service is closed")
+            self._pending += 1
+            self.stats.submitted += 1
+            bucket = self._buckets.get(key)
+            opened = bucket is None
+            if opened:
+                bucket = self._buckets[key] = _Bucket(key, now)
+            bucket.requests.append(req)
+            if len(bucket.requests) >= self.config.max_batch:
+                del self._buckets[key]
+                self._ready.put(bucket)
+                opened = False            # flushed already; no linger watch
+        if opened:
+            self._wake.set()
+        return req.future
+
+    def call(self, op: str, operands: tuple, *,
+             backend: Optional[str] = None, **kw):
+        """Synchronous convenience wrapper: ``submit(...).result()``."""
+        return self.submit(op, operands, backend=backend, **kw).result()
+
+    def flush(self) -> None:
+        """Force every pending bucket onto the execution queue now."""
+        with self._mutex:
+            for key in list(self._buckets):
+                self._ready.put(self._buckets.pop(key))
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Flush and wait until no request is in flight; True on success."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        self.flush()
+        with self._mutex:
+            while self._pending > 0:
+                if deadline is not None and time.monotonic() >= deadline:
+                    return False
+                self._done.wait(0.05)
+        return True
+
+    # -- stats ----------------------------------------------------------------
+    def bucket_stats(self) -> dict[tuple, object]:
+        """Per-bucket serving stats recorded on the runtime, keyed
+        ``(backend, op, dtype_bytes, dims)``."""
+        with self.runtime._lock:
+            return dict(self.runtime.stats.buckets)
+
+    # -- lifecycle ------------------------------------------------------------
+    def close(self, timeout: float = 30.0) -> None:
+        """Drain in-flight work, persist the decision cache (when a registry
+        was given), and stop the threads.  Idempotent.
+
+        New submissions are rejected *before* the drain starts — otherwise a
+        submit racing the shutdown could park a request in a bucket no
+        scheduler or worker would ever flush."""
+        with self._mutex:
+            if self._closed:
+                return
+            self._closed = True
+            self._done.notify_all()
+        self.drain(timeout=timeout)
+        self._wake.set()
+        for _ in self._workers:
+            self._ready.put(None)         # worker shutdown sentinels
+        self._scheduler.join(timeout=5.0)
+        for w in self._workers:
+            w.join(timeout=5.0)
+        if self.registry is not None:
+            self.registry.save_decision_cache(self.runtime)
+
+    def __enter__(self) -> "BlasService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- scheduler / workers --------------------------------------------------
+    def _scheduler_loop(self) -> None:
+        """Linger watchdog: flush buckets whose head request has aged out."""
+        linger = max(self.config.linger_ms / 1000.0, 1e-4)
+        while not self._closed:
+            self._wake.clear()
+            timeout = linger
+            with self._mutex:
+                now = time.monotonic()
+                for key, bucket in list(self._buckets.items()):
+                    age = now - bucket.t_head
+                    if age >= linger:
+                        del self._buckets[key]
+                        self._ready.put(bucket)
+                    else:
+                        timeout = min(timeout, linger - age)
+                idle = not self._buckets
+            # empty table: sleep until a bucket opens; else until the
+            # earliest linger deadline
+            self._wake.wait(None if idle else timeout)
+
+    def _worker_loop(self) -> None:
+        """Workers drain the ready queue; an *idle* worker steals the
+        largest worthwhile pending bucket instead of waiting out its linger
+        — work-conserving scheduling, so linger only delays requests while
+        every worker is busy (during which the next batch accumulates
+        anyway; batch size adapts to execution speed).  Buckets below
+        ``min_steal`` are left to fill: a stacked launch has a fixed
+        dispatch cost, so tiny early flushes would *lose* throughput."""
+        min_steal = self.config.min_steal
+        if min_steal is None:
+            min_steal = max(1, self.config.max_batch // 2)
+        poll = 0.001
+        while True:
+            try:
+                bucket = self._ready.get(timeout=poll)
+            except queue.Empty:
+                bucket, table_empty = self._steal(min_steal)
+                if bucket is None:
+                    # fast 1 ms polls only while partial buckets are still
+                    # filling; a fully idle service backs off (new work
+                    # reaches us through the queue or the linger watchdog)
+                    poll = 0.05 if table_empty else 0.001
+                    continue
+            if bucket is None:            # shutdown sentinel
+                return
+            self._execute(bucket)
+            poll = 0.001
+
+    def _steal(self, min_steal: int) -> tuple[Optional[_Bucket], bool]:
+        """(largest steal-eligible bucket or None, was-the-table-empty)."""
+        with self._mutex:
+            if not self._buckets:
+                return None, True
+            key = max(self._buckets,
+                      key=lambda k: len(self._buckets[k].requests))
+            if len(self._buckets[key].requests) < min_steal:
+                return None, False
+            return self._buckets.pop(key), False
+
+    def _pad_width(self, n: int, backend: str) -> int:
+        """Canonical stack width for a bucket of ``n``: next power of two,
+        capped at ``max_batch`` — bounds the set of distinct batch shapes a
+        jit backend ever compiles (one executable per width, reused).
+        Backends that execute stacks as a loop (``jit_stacked`` False) are
+        never padded: filler rows would just run as wasted extra ops."""
+        if not self.config.pad_batches or n >= self.config.max_batch:
+            return n
+        from repro.backends import resolve_backend
+        try:
+            if not resolve_backend(backend).jit_stacked:
+                return n
+        except KeyError:
+            return n
+        width = 1
+        while width < n:
+            width <<= 1
+        return min(width, self.config.max_batch)
+
+    def _execute(self, bucket: _Bucket) -> None:
+        from repro.kernels.ops import run_op
+        reqs = bucket.requests
+        backend, op, dtype_bytes, dims, _dtype, _extra = bucket.key
+        width = self._pad_width(len(reqs), backend)
+        try:
+            stacked = tuple(
+                np.stack([r.operands[i] for r in reqs] +
+                         [reqs[-1].operands[i]] * (width - len(reqs)))
+                for i in range(len(reqs[0].operands)))
+            out = np.asarray(run_op(op, stacked, backend=backend,
+                                    runtime=self.runtime, stacked=True,
+                                    **reqs[0].kw))
+        except Exception as e:           # noqa: BLE001 — fail the whole bucket
+            for r in reqs:
+                r.future.set_exception(e)
+            # futures resolve BEFORE the pending count drops: drain()/close()
+            # promise that no request is in flight once they return
+            with self._mutex:
+                self.stats.failed += len(reqs)
+                self.stats.batches += 1
+                self._pending -= len(reqs)
+                self._done.notify_all()
+            return
+        self.runtime.record_batch(op, dims, dtype_bytes, backend, len(reqs))
+        now = time.monotonic()
+        for i, r in enumerate(reqs):
+            # copy: a view of out would pin the whole (possibly padded)
+            # stack in memory for as long as any one result is referenced
+            r.future.set_result(out[i].copy())
+        # futures resolve BEFORE the pending count drops: drain()/close()
+        # promise that no request is in flight once they return
+        with self._mutex:
+            self.stats.completed += len(reqs)
+            self.stats.batches += 1
+            self.stats.max_batch = max(self.stats.max_batch, len(reqs))
+            self.stats.padded_items += width - len(reqs)
+            self.stats.latency_sum += sum(now - r.t_submit for r in reqs)
+            self._pending -= len(reqs)
+            self._done.notify_all()

@@ -1,0 +1,259 @@
+"""AdsalaRuntime accounting hardening: concurrency stress on the stats
+counters (aggregate must equal the per-backend sums under contention), LRU
+decision-cache eviction order, warm-start export/import, and
+ModelRegistry-level legacy-v1 artifact handling."""
+
+import json
+import random
+import threading
+
+import pytest
+
+from repro.core import AdsalaRuntime, ModelRegistry, install_subroutine
+from repro.core.knobs import Knob
+from repro.kernels import ops
+
+
+class StubSub:
+    """Minimal TunedSubroutine stand-in: a fixed-knob 'model' whose
+    evaluations are observable (the runtime only needs op/dtype_bytes/
+    backend/select)."""
+
+    def __init__(self, backend: str, op: str = "gemm",
+                 dtype_bytes: int = 4) -> None:
+        self.backend = backend
+        self.op = op
+        self.dtype_bytes = dtype_bytes
+        self.knob = Knob((("bm", 128), ("bn", 128)))
+        self.evals = 0
+
+    def select(self, dims):
+        self.evals += 1
+        return self.knob
+
+
+# ---------------------------------------------------------------------------
+# concurrency stress: aggregate counters == sum of per-backend counters
+# ---------------------------------------------------------------------------
+
+def test_stats_consistent_under_concurrent_mixed_backend_load():
+    rt = AdsalaRuntime(cache_size=4)      # small: constant LRU churn
+    backends = ("b0", "b1")
+    for name in backends:
+        rt.register(StubSub(name))
+    default = Knob((("bm", 64), ("bn", 64)))
+    dims_pool = [(32 * i, 32, 32) for i in range(1, 7)]
+    n_threads, n_iters = 8, 300
+    errors = []
+
+    def worker(tid):
+        rng = random.Random(tid)
+        try:
+            for _ in range(n_iters):
+                dims = rng.choice(dims_pool)
+                roll = rng.random()
+                if roll < 0.4:
+                    rt.select("gemm", dims, 4, backend=rng.choice(backends))
+                elif roll < 0.8:
+                    rt.select_or_default("gemm", dims, 4, default,
+                                         backend=rng.choice(backends))
+                else:   # untuned backend → default path
+                    rt.select_or_default("gemm", dims, 4, default,
+                                         backend="untuned")
+        except Exception as e:   # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+
+    s = rt.stats
+    assert s.calls == n_threads * n_iters
+    per = list(s.backends.values())
+    for counter in ("calls", "cache_hits", "default_calls", "model_evals"):
+        agg = getattr(s, counter)
+        total = sum(getattr(b, counter) for b in per)
+        assert agg == total, f"{counter}: aggregate {agg} != sum {total}"
+    assert s.eval_seconds == pytest.approx(
+        sum(b.eval_seconds for b in per), abs=1e-6)
+    # every select is exactly one of: hit, model eval, default
+    assert s.calls == s.cache_hits + s.model_evals + s.default_calls
+    assert set(s.backends) == {"b0", "b1", "untuned"}
+    assert s.backends["untuned"].default_calls == \
+        s.backends["untuned"].calls
+
+
+# ---------------------------------------------------------------------------
+# LRU decision cache: eviction order + warm-start round trip
+# ---------------------------------------------------------------------------
+
+def test_lru_eviction_order():
+    rt = AdsalaRuntime(cache_size=3)
+    sub = StubSub("b0")
+    rt.register(sub)
+
+    def dims_in_cache():
+        return [tuple(e["dims"]) for e in rt.export_cache()]
+
+    A, B, C, D = (32, 32, 32), (64, 32, 32), (96, 32, 32), (128, 32, 32)
+    for d in (A, B, C):
+        rt.select("gemm", d, 4, backend="b0")
+    assert dims_in_cache() == [A, B, C]          # insertion order, LRU first
+    rt.select("gemm", A, 4, backend="b0")        # hit refreshes A
+    assert dims_in_cache() == [B, C, A]
+    assert sub.evals == 3
+    rt.select("gemm", D, 4, backend="b0")        # evicts B (now oldest)
+    assert dims_in_cache() == [C, A, D]
+    assert rt.cache_len() == 3
+    evals_before = sub.evals
+    rt.select("gemm", B, 4, backend="b0")        # B was evicted → re-eval
+    assert sub.evals == evals_before + 1
+    assert dims_in_cache() == [A, D, B]
+
+
+def test_cache_export_import_skips_model_evals():
+    rt = AdsalaRuntime()
+    sub = StubSub("b0")
+    rt.register(sub)
+    shapes = [(32 * i, 32, 32) for i in range(1, 5)]
+    for d in shapes:
+        rt.select("gemm", d, 4, backend="b0")
+    exported = rt.export_cache()
+    assert len(exported) == len(shapes)
+
+    warm = AdsalaRuntime()
+    warm_sub = StubSub("b0")
+    warm.register(warm_sub)
+    assert warm.import_cache(exported) == len(shapes)
+    for d in shapes:
+        assert warm.select("gemm", d, 4, backend="b0") == sub.knob
+    assert warm_sub.evals == 0
+    assert warm.stats.model_evals == 0
+    assert warm.stats.cache_hits == len(shapes)
+
+
+def test_import_cache_respects_capacity():
+    rt = AdsalaRuntime()
+    rt.register(StubSub("b0"))
+    for i in range(1, 7):
+        rt.select("gemm", (32 * i, 32, 32), 4, backend="b0")
+    small = AdsalaRuntime(cache_size=3)
+    small.import_cache(rt.export_cache())
+    assert small.cache_len() == 3
+    # the newest three entries survive, in order
+    assert [tuple(e["dims"]) for e in small.export_cache()] == \
+        [(128, 32, 32), (160, 32, 32), (192, 32, 32)]
+
+
+def test_import_cache_drops_knobs_outside_registered_space():
+    """A cache persisted before a recalibration may name knobs the new
+    candidate space no longer contains — those entries must not warm-start."""
+    rt = AdsalaRuntime()
+    rt.register(StubSub("b0"))
+    rt.select("gemm", (32, 32, 32), 4, backend="b0")
+    entries = rt.export_cache()
+    stale = dict(entries[0])
+    stale["knob"] = {"bm": 7, "bn": 7}          # never a candidate
+    stale["dims"] = [64, 64, 64]
+
+    class SpacedSub(StubSub):
+        def __init__(self):
+            super().__init__("b0")
+            self.knob_space = type("S", (), {
+                "candidates": [self.knob]})()
+
+    warm = AdsalaRuntime()
+    warm.register(SpacedSub())
+    assert warm.import_cache(entries + [stale]) == 1
+    assert [tuple(e["dims"]) for e in warm.export_cache()] == [(32, 32, 32)]
+    # unregistered subroutines can't validate → import as-is
+    bare = AdsalaRuntime()
+    assert bare.import_cache([stale]) == 1
+
+
+def test_decision_cache_persists_via_registry(tmp_path):
+    reg = ModelRegistry(tmp_path)
+    rt = AdsalaRuntime()
+    rt.register(StubSub("b0"))
+    rt.select("gemm", (64, 64, 64), 4, backend="b0")
+    path = reg.save_decision_cache(rt)
+    assert path == tmp_path / ModelRegistry.DECISION_CACHE
+    payload = json.loads(path.read_text())
+    assert payload["version"] == 1 and len(payload["entries"]) == 1
+
+    warm = AdsalaRuntime()
+    warm.register(StubSub("b0"))
+    assert reg.load_decision_cache(warm) == 1
+    warm.select("gemm", (64, 64, 64), 4, backend="b0")
+    assert warm.stats.model_evals == 0 and warm.stats.cache_hits == 1
+
+
+def test_load_decision_cache_missing_file_is_noop(tmp_path):
+    rt = AdsalaRuntime()
+    assert ModelRegistry(tmp_path).load_decision_cache(rt) == 0
+    assert rt.cache_len() == 0
+
+
+def test_load_decision_cache_rejects_unknown_version(tmp_path):
+    reg = ModelRegistry(tmp_path)
+    reg.decision_cache_path.parent.mkdir(parents=True, exist_ok=True)
+    reg.decision_cache_path.write_text(
+        json.dumps({"version": 99, "entries": []}))
+    with pytest.raises(ValueError, match="version"):
+        reg.load_decision_cache(AdsalaRuntime())
+
+
+# ---------------------------------------------------------------------------
+# ModelRegistry: legacy v1 (untagged) artifacts
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def real_sub():
+    """One real tuned artifact (flat-time timer keeps the install fast)."""
+    space = ops.knob_space_for("gemm", sizes=(32, 64))
+    return install_subroutine(
+        "gemm", space, lambda dims, knob: 1e-3, n_samples=12,
+        dim_lo=32, dim_hi=64, max_footprint_bytes=1_000_000,
+        tune_trials=1, candidates=("LinearRegression",), use_lof=False,
+        backend="cpu_blocked")
+
+
+def test_registry_loads_legacy_v1_as_pallas(tmp_path, real_sub):
+    from repro.core.registry import pack_state
+    state = real_sub.get_state()
+    del state["backend"], state["version"]      # what a v1 writer produced
+    (tmp_path / "gemm_b4.adsala").write_bytes(pack_state(state))
+
+    reg = ModelRegistry(tmp_path)
+    assert reg.backends() == ("pallas",)
+    subs = reg.load_all()
+    assert len(subs) == 1 and subs[0].backend == "pallas"
+    # the filename-level filter agrees with the content-level default
+    assert len(reg.load_all(backend="pallas")) == 1
+    assert reg.load_all(backend="cpu_blocked") == []
+
+    rt = AdsalaRuntime()
+    assert reg.load_into(rt) == 1
+    assert rt.has("gemm", 4, backend="pallas")
+    assert not rt.has("gemm", 4, backend="cpu_blocked")
+
+
+def test_registry_mixed_legacy_and_tagged(tmp_path, real_sub):
+    from repro.core.registry import pack_state
+    reg = ModelRegistry(tmp_path)
+    reg.save(real_sub)                          # cpu_blocked__gemm_b4.adsala
+    state = real_sub.get_state()
+    del state["backend"], state["version"]
+    (tmp_path / "gemm_b4.adsala").write_bytes(pack_state(state))
+
+    assert reg.backends() == ("cpu_blocked", "pallas")
+    rt = AdsalaRuntime()
+    assert reg.load_into(rt) == 2
+    assert rt.backends() == ("cpu_blocked", "pallas")
+    # per-backend filtering unpacks only the matching files
+    assert [s.backend for s in reg.load_all(backend="cpu_blocked")] == \
+        ["cpu_blocked"]
