@@ -1,0 +1,341 @@
+#!/usr/bin/env python
+"""Decision-engine latency harness: the runtime knob-decision path.
+
+The paper's selection metric ``s = t_orig / (t_ADSALA + t_eval)`` charges
+every microsecond of decision latency against the speedup of every uncached
+BLAS call, so this bench tracks the three latencies that matter and pins
+them against frozen copies of the pre-fast-path (PR 2) implementations:
+
+  cold   one uncached knob decision per model family — reference path
+         (np.tile + pipeline object + Python parallelism loop) vs the
+         compiled fast path (fused preallocated evaluation), plus the
+         dominated-candidate pruned variant where the artifact allows it;
+  hit    one cached decision through the full per-call path run_op takes
+         (default-knob resolution + select_or_default) — pre-PR that
+         recomputed a parallelism argmax over the whole knob space and took
+         the runtime lock; now both are cached/lock-free — and the raw
+         runtime.select hit;
+  batch  select_many over B distinct uncached keys vs B individual selects.
+
+Every number is the median of ``--runs`` runs.  Results are persisted to
+``BENCH_decision.json`` at the repo root (perf trajectory).  ``--smoke``
+runs a tiny configuration, asserts fast/reference argmin parity and sanity
+(fast <= reference), and skips the JSON write — the CI gate.
+
+    PYTHONPATH=src python benchmarks/decision_bench.py
+    PYTHONPATH=src python benchmarks/decision_bench.py --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import platform
+import statistics
+import sys
+import threading
+import time
+from pathlib import Path
+
+# decision latencies are sub-GIL-quantum: long switch intervals turn any
+# cross-thread handoff into multi-ms stalls (serving-bench lesson)
+sys.setswitchinterval(5e-4)
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import AdsalaRuntime, install_subroutine  # noqa: E402
+from repro.core.fastpath import compile_predictor  # noqa: E402
+from repro.core.ml import PAPER_CANDIDATES  # noqa: E402
+from repro.core.runtime import RuntimeStats  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+OUT_PATH = REPO_ROOT / "BENCH_decision.json"
+
+
+# ---------------------------------------------------------------------------
+# frozen pre-PR reference implementations (PR 2 tree)
+# ---------------------------------------------------------------------------
+
+class LegacyRuntime:
+    """Frozen copy of the PR-2 ``AdsalaRuntime.select``/``select_or_default``
+    hot path: RLock held across stats + OrderedDict hit bookkeeping, and a
+    second lock round trip in select_or_default."""
+
+    def __init__(self, cache_size: int = 256) -> None:
+        self._subs = {}
+        self._cache = collections.OrderedDict()
+        self._cache_size = cache_size
+        self._lock = threading.RLock()
+        self.stats = RuntimeStats()
+
+    def register(self, sub, backend: str) -> None:
+        self._subs[(backend, sub.op, sub.dtype_bytes)] = sub
+
+    def select(self, op, dims, dtype_bytes=4, backend="pallas"):
+        key = (backend, op, dtype_bytes, tuple(int(d) for d in dims))
+        with self._lock:
+            self.stats.calls += 1
+            bstats = self.stats.for_backend(backend)
+            bstats.calls += 1
+            hit = self._cache.get(key)
+            if hit is not None:
+                self.stats.cache_hits += 1
+                bstats.cache_hits += 1
+                self._cache.move_to_end(key)
+                return hit
+            sub = self._subs[(backend, op, dtype_bytes)]
+        t0 = time.perf_counter()
+        knob = sub.select(key[3])
+        dt = time.perf_counter() - t0
+        with self._lock:
+            self.stats.model_evals += 1
+            self.stats.eval_seconds += dt
+            self._cache[key] = knob
+            self._cache.move_to_end(key)
+            while len(self._cache) > self._cache_size:
+                self._cache.popitem(last=False)
+        return knob
+
+    def select_or_default(self, op, dims, dtype_bytes, default, *,
+                          backend="pallas"):
+        with self._lock:
+            if (backend, op, dtype_bytes) not in self._subs:
+                self.stats.calls += 1
+                self.stats.default_calls += 1
+                return default
+        return self.select(op, dims, dtype_bytes, backend=backend)
+
+
+def legacy_default_knob(op: str):
+    """Pre-PR ``ops.default_knob``: parallelism argmax over the whole knob
+    space recomputed per call (now behind functools.lru_cache)."""
+    return ops.default_knob.__wrapped__(op)
+
+
+# ---------------------------------------------------------------------------
+# measurement helpers
+# ---------------------------------------------------------------------------
+
+def _time_us(fn, inner: int) -> float:
+    fn()                                  # warmup
+    t0 = time.perf_counter()
+    for _ in range(inner):
+        fn()
+    return (time.perf_counter() - t0) / inner * 1e6
+
+
+def median_us(fn, *, runs: int, inner: int) -> float:
+    return statistics.median(_time_us(fn, inner) for _ in range(runs))
+
+
+def _install(op: str, family: str, *, sizes, n_samples: int):
+    space = ops.knob_space_for(op, sizes=sizes)
+
+    def timer(dims, knob):
+        # compute term + per-grid-cell launch overhead + block-size cost:
+        # the argmin knob shifts with dims, so tuned models have non-trivial
+        # live candidate sets
+        d = knob.dict
+        par = space.parallelism(knob, dims)
+        work = float(np.prod(np.asarray(dims, dtype=np.float64)))
+        return 1e-9 * work / par + 3e-6 * par \
+            + 1e-8 * (d.get("bm", 1) + d.get("bn", 1))
+
+    return install_subroutine(
+        op, space, timer, n_samples=n_samples, dim_lo=32, dim_hi=1024,
+        max_footprint_bytes=64_000_000, candidates=(family,), tune_trials=1,
+        use_lof=False, backend="bench")
+
+
+# ---------------------------------------------------------------------------
+# the three benches
+# ---------------------------------------------------------------------------
+
+def bench_cold(families, *, sizes, n_samples, runs, inner, dims=(512, 384, 640)):
+    """Per model family: reference vs fast (vs fast+prune) uncached eval."""
+    out = {}
+    for family in families:
+        sub = _install("gemm", family, sizes=sizes, n_samples=n_samples)
+        cp = sub.compiled()
+        ref = median_us(lambda: sub.select(dims), runs=runs, inner=inner)
+        fast = median_us(lambda: cp.select(dims), runs=runs, inner=inner)
+        row = {"reference_us": round(ref, 2), "fast_us": round(fast, 2),
+               "speedup": round(ref / fast, 2), "K": len(sub.knob_space)}
+        pruned = sub.compiled(prune=True)
+        if pruned is not None and pruned._live is not None:
+            mid = tuple(int((a + b) // 2) for a, b in
+                        zip(sub.fast_dims_lo, sub.fast_dims_hi))
+            row["fast_pruned_us"] = round(median_us(
+                lambda: pruned.select(mid), runs=runs, inner=inner), 2)
+            row["live_K"] = int(sub.fast_live_idx.size)
+        # parity gate: the fast path must agree with the reference argmin
+        rng = np.random.default_rng(3)
+        for _ in range(25):
+            d = tuple(int(v) for v in rng.integers(16, 2048, size=3))
+            assert cp.select(d) == sub.select(d), (family, d)
+        out[family] = row
+    return out
+
+
+def bench_hit(sub, *, runs, inner):
+    """Cached-decision latency: pre-PR vs current, raw select and the full
+    per-call path (default-knob resolution + select_or_default)."""
+    dims = (512, 384, 640)
+    legacy = LegacyRuntime()
+    legacy.register(sub, "bench")
+    legacy.select("gemm", dims, 4, backend="bench")
+    rt = AdsalaRuntime()
+    rt.register(sub, backend="bench")
+    rt.select("gemm", dims, 4, backend="bench")
+
+    raw_old = median_us(lambda: legacy.select("gemm", dims, 4,
+                                              backend="bench"),
+                        runs=runs, inner=inner)
+    raw_new = median_us(lambda: rt.select("gemm", dims, 4, backend="bench"),
+                        runs=runs, inner=inner)
+    # the path run_op actually takes per call on a cache hit
+    path_old = median_us(
+        lambda: legacy.select_or_default("gemm", dims, 4,
+                                         legacy_default_knob("gemm"),
+                                         backend="bench"),
+        runs=runs, inner=max(inner // 10, 50))
+    path_new = median_us(
+        lambda: rt.select_or_default("gemm", dims, 4,
+                                     ops.default_knob("gemm"),
+                                     backend="bench"),
+        runs=runs, inner=inner)
+    return {
+        "select_pre_pr_us": round(raw_old, 3),
+        "select_us": round(raw_new, 3),
+        "select_speedup": round(raw_old / raw_new, 2),
+        "call_path_pre_pr_us": round(path_old, 3),
+        "call_path_us": round(path_new, 3),
+        "call_path_speedup": round(path_old / path_new, 2),
+    }
+
+
+def bench_batch(sub, *, runs, batch=64):
+    """select_many over B distinct cold keys vs B individual selects."""
+    rng = np.random.default_rng(5)
+    dims_list = [tuple(int(v) for v in rng.integers(64, 1024, size=3))
+                 for _ in range(batch)]
+    rt = AdsalaRuntime(cache_size=4)     # tiny cache: every round is cold
+    rt.register(sub, backend="bench")
+    reqs = [("gemm", d, 4, "bench") for d in dims_list]
+
+    def many():
+        rt.clear_cache()
+        rt.select_many(reqs)
+
+    def loop():
+        rt.clear_cache()
+        for d in dims_list:
+            rt.select("gemm", d, 4, backend="bench")
+
+    t_many = median_us(many, runs=runs, inner=5)
+    t_loop = median_us(loop, runs=runs, inner=5)
+    # equivalence gate
+    rt.clear_cache()
+    got = rt.select_many(reqs)
+    want = [sub.select(d) for d in dims_list]
+    assert got == want, "select_many decisions diverge from select"
+    return {
+        "batch": batch,
+        "select_many_us": round(t_many, 1),
+        "n_selects_us": round(t_loop, 1),
+        "speedup": round(t_loop / t_many, 2),
+        "select_many_keys_per_s": round(batch / t_many * 1e6),
+        "n_selects_keys_per_s": round(batch / t_loop * 1e6),
+    }
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--runs", type=int, default=3,
+                   help="median-of-N runs per number")
+    p.add_argument("--inner", type=int, default=2000,
+                   help="timed iterations per run (hit path)")
+    p.add_argument("--cold-inner", type=int, default=300,
+                   help="timed iterations per run (cold path)")
+    p.add_argument("--families", nargs="*", default=list(PAPER_CANDIDATES),
+                   help="model families to bench cold")
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny config, parity + sanity asserts, no JSON")
+    p.add_argument("--out", type=Path, default=OUT_PATH)
+    args = p.parse_args(argv)
+
+    if args.smoke:
+        args.families = ["LinearRegression", "DecisionTree"]
+        sizes, n_samples = (32, 64), 10
+        args.inner, args.cold_inner, args.runs = 200, 30, 2
+    else:
+        sizes, n_samples = (128, 256, 512), 60
+
+    print(f"[decision_bench] cold eval: {len(args.families)} families "
+          f"(K={len(ops.knob_space_for('gemm', sizes=sizes))}, "
+          f"median of {args.runs})")
+    cold = bench_cold(args.families, sizes=sizes, n_samples=n_samples,
+                      runs=args.runs, inner=args.cold_inner)
+    for fam, row in cold.items():
+        extra = (f"  pruned {row['fast_pruned_us']}us (live K="
+                 f"{row['live_K']})" if "fast_pruned_us" in row else "")
+        print(f"  {fam:>18}: ref {row['reference_us']:>8.1f}us  "
+              f"fast {row['fast_us']:>7.2f}us  {row['speedup']:>5.1f}x"
+              + extra)
+
+    hit_sub = _install("gemm", "LinearRegression", sizes=sizes,
+                       n_samples=n_samples)
+    hit = bench_hit(hit_sub, runs=args.runs, inner=args.inner)
+    print(f"[decision_bench] cache hit: raw select "
+          f"{hit['select_pre_pr_us']}us -> {hit['select_us']}us "
+          f"({hit['select_speedup']}x); full call path "
+          f"{hit['call_path_pre_pr_us']}us -> {hit['call_path_us']}us "
+          f"({hit['call_path_speedup']}x)")
+
+    batch = bench_batch(hit_sub, runs=args.runs)
+    print(f"[decision_bench] batched: {batch['batch']} keys "
+          f"{batch['n_selects_us']}us -> {batch['select_many_us']}us "
+          f"({batch['speedup']}x, "
+          f"{batch['select_many_keys_per_s']} keys/s)")
+
+    cold_speedups = [row["speedup"] for row in cold.values()]
+    summary = {
+        "cold_median_speedup": round(statistics.median(cold_speedups), 2),
+        "cold_min_speedup": round(min(cold_speedups), 2),
+        "hit_call_path_speedup": hit["call_path_speedup"],
+        "batch_speedup": batch["speedup"],
+    }
+    print(f"[decision_bench] summary: {summary}")
+
+    if args.smoke:
+        assert summary["cold_median_speedup"] > 1.0, \
+            "fast path slower than reference"
+        assert summary["hit_call_path_speedup"] > 1.0, \
+            "hit path slower than pre-PR"
+        print("[decision_bench] smoke OK (parity + latency sanity)")
+        return 0
+
+    payload = {
+        "bench": "decision",
+        "host": {"platform": platform.platform(),
+                 "python": platform.python_version(),
+                 "numpy": np.__version__},
+        "config": {"runs": args.runs, "inner": args.inner,
+                   "cold_inner": args.cold_inner, "knob_sizes": list(sizes),
+                   "n_samples": n_samples},
+        "cold_model_eval": cold,
+        "cache_hit": hit,
+        "batched_selection": batch,
+        "summary": summary,
+    }
+    args.out.write_text(json.dumps(payload, indent=1) + "\n")
+    print(f"[decision_bench] wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -9,6 +9,8 @@ gets a correct result instead of a crash.
 
 from __future__ import annotations
 
+import threading
+
 from .base import Backend
 
 __all__ = ["register_backend", "unregister_backend", "get_backend",
@@ -20,16 +22,31 @@ FALLBACK_BACKEND = "ref"
 
 _REGISTRY: dict[str, Backend] = {}
 
+#: registry mutation counter: resolve_backend memoizes (name → backend)
+#: stamped with the generation it was computed under, so registering or
+#: unregistering any backend invalidates every memoized resolution without
+#: a scan.  Resolution sits on the per-call BLAS dispatch path — the memo
+#: turns the chain walk + is_available() probe into one dict hit.
+_GENERATION = 0
+_RESOLVE_MEMO: dict[str, tuple[int, Backend]] = {}
+_MUTATE_LOCK = threading.Lock()
+
 
 def register_backend(backend: Backend, *, overwrite: bool = False) -> Backend:
-    if not overwrite and backend.name in _REGISTRY:
-        raise ValueError(f"backend {backend.name!r} already registered")
-    _REGISTRY[backend.name] = backend
+    global _GENERATION
+    with _MUTATE_LOCK:        # dict insert + generation bump move together
+        if not overwrite and backend.name in _REGISTRY:
+            raise ValueError(f"backend {backend.name!r} already registered")
+        _REGISTRY[backend.name] = backend
+        _GENERATION += 1
     return backend
 
 
 def unregister_backend(name: str) -> None:
-    _REGISTRY.pop(name, None)
+    global _GENERATION
+    with _MUTATE_LOCK:
+        _REGISTRY.pop(name, None)
+        _GENERATION += 1
 
 
 def get_backend(name: str) -> Backend:
@@ -50,12 +67,29 @@ def fallback_chain(name: str) -> tuple[str, ...]:
 
 
 def resolve_backend(backend: str | Backend | None) -> Backend:
-    """Requested backend → ref fallback; raises only if even ``ref`` is gone."""
+    """Requested backend → ref fallback; raises only if even ``ref`` is gone.
+
+    Exact resolutions (requested backend registered and available) are
+    memoized per name until the next registry mutation (``_GENERATION``);
+    fallback resolutions and failures are never cached, and a memo hit
+    still re-probes ``is_available()`` — availability that flips at
+    runtime, in either direction, must change the outcome on the next
+    call, exactly as the unmemoized chain walk would."""
     if isinstance(backend, Backend):
         return backend
-    for name in fallback_chain(backend or FALLBACK_BACKEND):
+    requested = backend or FALLBACK_BACKEND
+    # snapshot the generation BEFORE walking the chain: a registration
+    # racing the walk bumps the counter, and a result computed against the
+    # older registry must not be stamped with the newer generation
+    gen = _GENERATION
+    memo = _RESOLVE_MEMO.get(requested)
+    if memo is not None and memo[0] == gen and memo[1].is_available():
+        return memo[1]
+    for name in fallback_chain(requested):
         be = _REGISTRY.get(name)
         if be is not None and be.is_available():
+            if name == requested:
+                _RESOLVE_MEMO[requested] = (gen, be)
             return be
     raise KeyError(f"no executable backend for {backend!r} "
                    f"(registered: {available_backends()})")

@@ -17,6 +17,7 @@ from .knobs import Knob, KnobSpace, block_knob_space, thread_knob_space
 from .dataset import TimingDataset, gather
 from .oracle import V5E, TpuSpec, oracle_time
 from .preprocess import PreprocessPipeline, YeoJohnsonTransformer
+from .fastpath import CompiledPredictor, compile_predictor
 from .lof import lof_scores, remove_outliers
 from .selection import ModelReport, evaluate_candidates, select_best
 from .tuner import TunedSubroutine, install_backend, install_subroutine
@@ -31,7 +32,8 @@ __all__ = [
     "footprint_words", "halton_sequence", "sample_dims", "scrambled_halton",
     "Knob", "KnobSpace", "block_knob_space", "thread_knob_space",
     "TimingDataset", "gather", "V5E", "TpuSpec", "oracle_time",
-    "PreprocessPipeline", "YeoJohnsonTransformer", "lof_scores",
+    "PreprocessPipeline", "YeoJohnsonTransformer", "CompiledPredictor",
+    "compile_predictor", "lof_scores",
     "remove_outliers", "ModelReport", "evaluate_candidates", "select_best",
     "TunedSubroutine", "install_subroutine", "install_backend",
     "AdsalaRuntime", "BackendStats", "BucketStats", "RuntimeStats",

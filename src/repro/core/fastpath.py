@@ -1,0 +1,383 @@
+"""Compiled fast path for the runtime decision engine.
+
+The paper's model-selection metric is ``s = t_orig / (t_ADSALA + t_eval)``
+(§IV-D): every microsecond of knob-decision latency is charged against the
+speedup of every uncached BLAS call.  The reference decision path
+(:meth:`~repro.core.tuner.TunedSubroutine.select`) rebuilds a ``(K, F)``
+feature matrix with ``np.tile``, walks the knob candidates in a Python loop
+for the parallelism feature, and runs a three-stage pipeline *object* per
+call.  :func:`compile_predictor` folds all of that into a
+:class:`CompiledPredictor` once, at ``register()``/artifact-load time:
+
+* the feature matrix is written straight into a preallocated per-thread
+  buffer, computing ONLY the Table-III columns that survive the pipeline's
+  correlation prune — pruned columns are never materialised;
+* the Yeo-Johnson lambdas, standardizer mean/scale, and prune mask are fused
+  into one vectorized pass over that buffer (add, power, subtract, divide —
+  all in place, no pipeline-object hops or intermediate allocations);
+* the parallelism ("nt") feature is vectorised: block knob spaces use the
+  closed-form grid formula over precomputed ``(bm, bn)`` arrays, thread-count
+  spaces are detected as dims-independent and their nt vector is computed
+  once at compile time;
+* the model is evaluated in a single ``predict`` call and the argmin mapped
+  back through the candidate list.
+
+Correctness bar: for any dims, :meth:`CompiledPredictor.select` returns the
+bit-identical argmin knob of the reference path — every arithmetic step
+reproduces the reference's elementwise operations (same ufuncs, same
+association order, float64 throughout) restricted to the surviving columns.
+``tests/test_fastpath.py`` asserts exact equality of the predicted-time
+vectors on every persisted artifact.
+
+An optional dominated-candidate prune (``prune=True``) additionally drops
+candidates the tuned model never argmin-selects over the install-time
+dataset's dims (persisted on the artifact as ``fast_live_idx``).  Dims
+outside the dataset's bounding box fall back to full-K evaluation —
+extrapolated predictions are the disagreement-prone ones — so pruning only
+shortcuts the interpolation regime it was validated on.
+"""
+
+from __future__ import annotations
+
+import threading
+import warnings
+
+import numpy as np
+
+from . import features as F
+from .knobs import _grid_parallelism
+
+__all__ = ["CompiledPredictor", "compile_predictor"]
+
+#: probe dims used to detect a dims-independent parallelism measure
+_PROBE_A = (64, 96, 128)
+_PROBE_B = (320, 192, 256)
+
+_LEAF = -1
+
+
+class _StackedForest:
+    """Every tree of an ensemble, concatenated into one flat node table and
+    descended level-synchronously: one set of numpy calls per depth level
+    for ALL trees x rows, instead of a per-tree Python loop of per-level
+    calls.  Bit-exact — tree inference is comparisons and table lookups,
+    no floating-point reassociation — so folded ensembles predict the same
+    values as the reference per-tree loop."""
+
+    def __init__(self, trees) -> None:
+        offsets = np.cumsum([0] + [t.feature.size for t in trees[:-1]])
+        self.roots = offsets.astype(np.int64)
+        self.feature = np.concatenate([t.feature for t in trees])
+        self.threshold = np.concatenate([t.threshold for t in trees])
+        # leaf nodes keep child = _LEAF; the shifted garbage index is never
+        # *used* (is_split masks it out), matching ArrayTree.predict
+        self.left = np.concatenate(
+            [t.left + o for t, o in zip(trees, offsets)])
+        self.right = np.concatenate(
+            [t.right + o for t, o in zip(trees, offsets)])
+        self.value = np.concatenate([t.value for t in trees])
+        self.depth = max(t.depth for t in trees)
+
+    def descend(self, X: np.ndarray) -> np.ndarray:
+        """(T, N) per-tree predictions for the (N, F) feature matrix."""
+        N = X.shape[0]
+        node = np.repeat(self.roots[:, None], N, axis=1)
+        rows = np.arange(N)[None, :]
+        for _ in range(self.depth + 1):
+            f = self.feature[node]
+            is_split = f != _LEAF
+            if not is_split.any():
+                break
+            fx = X[rows, np.maximum(f, 0)]
+            go_left = fx <= self.threshold[node]
+            nxt = np.where(go_left, self.left[node], self.right[node])
+            node = np.where(is_split, nxt, node)
+        return self.value[node]
+
+
+def _fold_model(model):
+    """The model's predict, with tree ensembles folded into a stacked
+    single-pass evaluation.  Combination rules replicate the reference
+    predicts operation for operation, so outputs are bit-identical."""
+    trees = getattr(model, "trees_", None)
+    if not trees or not all(hasattr(t, "feature") and hasattr(t, "depth")
+                            for t in trees):
+        return model.predict
+    name = getattr(model, "NAME", None)
+    forest = _StackedForest(trees)
+    if name == "RandomForest":
+        return lambda Z: np.mean(forest.descend(Z), axis=0)
+    if name == "XGBoost":
+        base = float(model.base_)
+        lr = float(model.learning_rate)
+
+        def xgb_predict(Z):
+            P = forest.descend(Z)
+            out = np.full(Z.shape[0], base)
+            for i in range(P.shape[0]):        # same add order as reference
+                out += lr * P[i]
+            return out
+        return xgb_predict
+    if name == "AdaBoost":
+        logw = np.log(1.0 / np.maximum(model.betas_, 1e-300))
+        half = 0.5 * logw.sum()
+
+        def ada_predict(Z):
+            preds = np.ascontiguousarray(forest.descend(Z).T)      # (N, T)
+            order = np.argsort(preds, axis=1)
+            sorted_preds = np.take_along_axis(preds, order, axis=1)
+            cum = np.cumsum(logw[order], axis=1)
+            pick = (cum >= half).argmax(axis=1)
+            return sorted_preds[np.arange(preds.shape[0]), pick]
+        return ada_predict
+    return model.predict
+
+
+class CompiledPredictor:
+    """One tuned (subroutine, pipeline, model) folded into a flat predict.
+
+    Thread-safe: the preallocated feature/transform buffers are per-thread
+    (the runtime evaluates models outside its lock), and all compiled
+    parameters are read-only after construction.
+    """
+
+    def __init__(self, op: str, knob_space, pipeline, model,
+                 log_target: bool, *, live_idx=None, dims_lo=None,
+                 dims_hi=None, prune: bool = False) -> None:
+        self.op = op
+        self.knob_space = knob_space
+        self.model = model
+        self._predict = _fold_model(model)
+        self.log_target = bool(log_target)
+        self.candidates = list(knob_space.candidates)
+        self.K = len(self.candidates)
+        self.ndims = F.SUBROUTINE_NDIMS[op]
+
+        # -- fused preprocess parameters (surviving columns only) ------------
+        keep, lam, mean, scale = pipeline.fused_params()
+        self.keep = keep
+        self.C = int(keep.size)
+        self.use_yj = lam is not None
+        if self.use_yj:
+            self._lam = lam.reshape(1, -1)
+            self._lam_safe = np.where(np.abs(self._lam) > 1e-6,
+                                      self._lam, 1.0)
+            self._log_cols = np.flatnonzero(np.abs(lam) <= 1e-6)
+        self._mean = mean.reshape(1, -1)
+        self._scale = scale.reshape(1, -1)
+
+        # -- vectorised parallelism ("nt") -----------------------------------
+        self._nt_mode = "generic"
+        self._nt_const = None
+        if getattr(knob_space, "_parallelism_fn", None) is _grid_parallelism:
+            dicts = [c.dict for c in self.candidates]
+            self._bm = np.array([c["bm"] for c in dicts], dtype=np.float64)
+            self._bn = np.array([c["bn"] for c in dicts], dtype=np.float64)
+            self._nt_mode = "grid"
+        else:
+            try:
+                va = knob_space.parallelism_vec(_PROBE_A[: self.ndims])
+                vb = knob_space.parallelism_vec(_PROBE_B[: self.ndims])
+                if np.array_equal(va, vb) and all(
+                        "nt" in c.dict for c in self.candidates):
+                    # thread-count-style space: nt never depends on dims, so
+                    # this feature column is computed once, here
+                    self._nt_const = np.asarray(va, dtype=np.float64)
+                    self._nt_mode = "const"
+            except Exception:
+                pass        # exotic space: per-call parallelism_vec fallback
+
+        # -- optional dominated-candidate prune ------------------------------
+        self._live = None
+        if prune and live_idx is not None and dims_lo is not None \
+                and dims_hi is not None:
+            live = np.unique(np.asarray(live_idx, dtype=np.int64))
+            if 0 < live.size < self.K \
+                    and live[0] >= 0 and live[-1] < self.K:
+                self._live = live
+                self._dims_lo = np.asarray(dims_lo).reshape(-1)
+                self._dims_hi = np.asarray(dims_hi).reshape(-1)
+                if self._nt_mode == "grid":
+                    self._bm_live = self._bm[live]
+                    self._bn_live = self._bn[live]
+                elif self._nt_mode == "const":
+                    self._nt_const_live = self._nt_const[live]
+
+        self._tls = threading.local()
+
+    # -- buffers --------------------------------------------------------------
+    def _buffers(self, rows: int) -> tuple:
+        """(X, T, nt) preallocated for this thread at ``rows`` candidates."""
+        bufs = getattr(self._tls, "bufs", None)
+        if bufs is None:
+            bufs = self._tls.bufs = {}
+        b = bufs.get(rows)
+        if b is None:
+            # F-order matches the reference pipeline's layout (its prune is
+            # a fancy index, which numpy returns column-major), so even the
+            # models' layout-sensitive low-order float bits reproduce
+            b = bufs[rows] = (np.empty((rows, self.C), order="F"),
+                              np.empty((rows, self.C), order="F"),
+                              np.empty(rows))
+        return b
+
+    # -- feature building -----------------------------------------------------
+    def _nt_into(self, dims: tuple, out: np.ndarray, bm: np.ndarray,
+                 bn: np.ndarray) -> np.ndarray:
+        if self._nt_mode == "grid":
+            # == float(ceil(m/bm) * ceil(n/bn)) per candidate, vectorised
+            np.divide(dims[0], bm, out=out)
+            np.ceil(out, out=out)
+            out *= np.ceil(dims[-1] / bn)
+            return out
+        return np.asarray(self.knob_space.parallelism_vec(dims),
+                          dtype=np.float64)
+
+    # -- the fused pass -------------------------------------------------------
+    def _transform(self, X: np.ndarray, T: np.ndarray) -> np.ndarray:
+        """Yeo-Johnson + standardize over the already-pruned columns, fused.
+
+        Reproduces ``pipeline.transform`` bit-for-bit on the kept columns:
+        Table-III features are non-negative, so only the reference's
+        positive YJ branch — ``(power(x+1, λ) - 1)/λ`` or ``log1p(x)`` at
+        λ≈0 — is ever taken.
+        """
+        if self.use_yj:
+            np.add(X, 1.0, out=T)
+            np.power(T, self._lam, out=T)
+            np.subtract(T, 1.0, out=T)
+            np.divide(T, self._lam_safe, out=T)
+            for j in self._log_cols:
+                np.log1p(X[:, j], out=T[:, j])
+            Z = T
+        else:
+            Z = X
+        np.subtract(Z, self._mean, out=Z)
+        np.divide(Z, self._scale, out=Z)
+        return Z
+
+    def _times(self, dims: tuple, rows_idx: np.ndarray | None) -> np.ndarray:
+        """Predicted time per candidate (all K, or the live subset)."""
+        if rows_idx is None:
+            rows = self.K
+            bm = getattr(self, "_bm", None)
+            bn = getattr(self, "_bn", None)
+            nt_const = self._nt_const
+        else:
+            rows = int(rows_idx.size)
+            bm = getattr(self, "_bm_live", None)
+            bn = getattr(self, "_bn_live", None)
+            nt_const = getattr(self, "_nt_const_live", None)
+        X, T, ntb = self._buffers(rows)
+        if self._nt_mode == "const":
+            nt = nt_const
+        else:
+            nt = self._nt_into(dims, ntb, bm, bn)
+            if rows_idx is not None and self._nt_mode == "generic":
+                nt = nt[rows_idx]
+        F.fill_features_into(self.op, dims, nt, self.keep, X)
+        pred = self._predict(self._transform(X, T))
+        return np.exp(pred) if self.log_target else pred
+
+    # -- public API -----------------------------------------------------------
+    def predict_times(self, dims: tuple) -> np.ndarray:
+        """Predicted runtime for every knob candidate (= reference
+        ``TunedSubroutine.predict_times``, bit-identical)."""
+        return self._times(tuple(dims), None)
+
+    def select_index(self, dims: tuple) -> int:
+        dims = tuple(dims)
+        live = self._live
+        if live is not None and self._in_bounds(dims):
+            return int(live[int(np.argmin(self._times(dims, live)))])
+        return int(np.argmin(self._times(dims, None)))
+
+    def select(self, dims: tuple):
+        return self.candidates[self.select_index(dims)]
+
+    def _in_bounds(self, dims: tuple) -> bool:
+        lo, hi = self._dims_lo, self._dims_hi
+        for i, d in enumerate(dims):
+            if d < lo[i] or d > hi[i]:
+                return False
+        return True
+
+    # -- batched API ----------------------------------------------------------
+    def predict_times_batch(self, dims_list) -> np.ndarray:
+        """(B, K) predicted times for B dims in ONE feature-build + predict.
+
+        Row ``b`` is bit-identical to ``predict_times(dims_list[b])`` — all
+        feature/transform arithmetic is elementwise and the models predict
+        row-wise, so batching cannot change any decision.
+        """
+        B = len(dims_list)
+        dims_arr = np.asarray(dims_list, dtype=np.float64)
+        if self._nt_mode == "grid":
+            nt = (np.ceil(dims_arr[:, :1] / self._bm) *
+                  np.ceil(dims_arr[:, -1:] / self._bn))
+        elif self._nt_mode == "const":
+            nt = np.broadcast_to(self._nt_const, (B, self.K))
+        else:
+            nt = np.stack([np.asarray(self.knob_space.parallelism_vec(
+                tuple(int(v) for v in d)), dtype=np.float64)
+                for d in dims_list])
+        # (B, K, C) view over an F-ordered (B*K, C) buffer, so the matrix
+        # handed to the model has the same layout class as the single-call
+        # path's F-ordered buffers (bit-stable tie-breaking either way:
+        # identical feature rows within one matrix predict identical values)
+        X3 = np.empty((self.C, B, self.K))
+        Xv = X3.transpose(1, 2, 0)
+        F.fill_features_batch(self.op, dims_arr, nt, self.keep, Xv)
+        Xf = Xv.reshape(B * self.K, self.C)
+        T = np.empty((B * self.K, self.C), order="F")
+        pred = self._predict(self._transform(Xf, T))
+        t = np.exp(pred) if self.log_target else pred
+        return t.reshape(B, self.K)
+
+    def select_many(self, dims_list) -> list:
+        """Argmin knob per dims, vectorised across the whole batch.
+
+        Applies the same dominated-candidate restriction as :meth:`select`
+        (per item, honouring the bounds fallback), so batched and
+        one-at-a-time decisions agree."""
+        t = self.predict_times_batch(dims_list)
+        live = self._live
+        out = []
+        for b, dims in enumerate(dims_list):
+            if live is not None and self._in_bounds(tuple(dims)):
+                i = int(live[int(np.argmin(t[b, live]))])
+            else:
+                i = int(np.argmin(t[b]))
+            out.append(self.candidates[i])
+        return out
+
+
+def compile_predictor(sub, *, prune: bool = False) -> CompiledPredictor | None:
+    """Fold a :class:`~repro.core.tuner.TunedSubroutine`-like artifact into a
+    :class:`CompiledPredictor`.
+
+    Returns ``None`` when the artifact lacks the required pieces (stub
+    subroutines in tests, partially constructed objects) or compilation
+    fails — callers fall back to the reference ``sub.select`` path, which is
+    always correct, just slower.
+    """
+    pipeline = getattr(sub, "pipeline", None)
+    model = getattr(sub, "model", None)
+    space = getattr(sub, "knob_space", None)
+    op = getattr(sub, "op", None)
+    if pipeline is None or model is None or space is None \
+            or op not in F.SUBROUTINE_NDIMS:
+        return None
+    try:
+        return CompiledPredictor(
+            op, space, pipeline, model,
+            getattr(sub, "log_target", False),
+            live_idx=getattr(sub, "fast_live_idx", None),
+            dims_lo=getattr(sub, "fast_dims_lo", None),
+            dims_hi=getattr(sub, "fast_dims_hi", None),
+            prune=prune)
+    except Exception as e:                       # noqa: BLE001
+        warnings.warn(f"fast-path compile failed for {op!r} "
+                      f"({type(e).__name__}: {e}); using reference path",
+                      RuntimeWarning, stacklevel=2)
+        return None

@@ -24,6 +24,7 @@ __all__ = [
     "SUBROUTINES", "SUBROUTINE_NDIMS", "footprint_words",
     "footprint_words_vec",
     "feature_names", "build_features",
+    "fill_features_into", "fill_features_batch",
 ]
 
 # dims per subroutine (paper Table I). GEMM: (m,k,n); SYMM/TRMM/TRSM: (m,n);
@@ -118,3 +119,80 @@ def build_features(op: str, dims: np.ndarray, nt: np.ndarray) -> np.ndarray:
             m / nt, n / nt, m * n / nt, fp / nt,
         ]
     return np.stack(cols, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# fused column building (the compiled runtime fast path)
+# ---------------------------------------------------------------------------
+
+#: sentinel marking "this column IS the parallelism vector"
+_NT = object()
+
+
+def _term_spec(op: str, d: tuple) -> tuple:
+    """Ordered Table-III column spec at fixed dims.
+
+    ``d`` holds one value per free dim — np.float64 scalars (single call) or
+    ``(B, 1)`` float64 arrays (batched).  Each entry is either a dims-only
+    value (constant across candidates), the ``_NT`` sentinel, or a 1-tuple
+    ``(numerator,)`` meaning ``numerator / nt``.  Every expression repeats
+    :func:`build_features` / :func:`footprint_words_vec` term by term (same
+    association order, float64 throughout), so filled columns are
+    bit-identical to the reference matrix's.
+    """
+    if SUBROUTINE_NDIMS[op] == 3:
+        m, k, n = d
+        mk = m * k
+        mn = m * n
+        kn = k * n
+        mkn = mk * n
+        fp = mk + kn + mn
+        return (m, k, n, _NT, mk, mn, kn, mkn, fp,
+                (m,), (k,), (n,), (mk,), (mn,), (kn,), (mkn,), (fp,))
+    m, n = d
+    mn = m * n
+    if op == "symm":
+        fp = m * m + 2 * m * n
+    elif op == "syrk":
+        fp = m * n + m * m
+    elif op == "syr2k":
+        fp = 2 * m * n + m * m
+    else:                               # trmm / trsm
+        fp = m * m + m * n
+    return (m, n, _NT, mn, fp, (m,), (n,), (mn,), (fp,))
+
+
+def fill_features_into(op: str, dims: tuple, nt: np.ndarray,
+                       col_idx: np.ndarray, out: np.ndarray) -> None:
+    """Write the selected Table-III columns for ONE dims into ``out``.
+
+    Bit-identical to ``build_features(op, tile(dims), nt)[:, col_idx]`` but
+    with no tiling, no unused columns, and no intermediate stacking —
+    ``out`` is the caller's preallocated ``(K, len(col_idx))`` buffer.
+    """
+    spec = _term_spec(op, tuple(np.float64(v) for v in dims))
+    for j, c in enumerate(col_idx):
+        s = spec[c]
+        if type(s) is tuple:
+            np.divide(s[0], nt, out=out[:, j])
+        elif s is _NT:
+            out[:, j] = nt
+        else:
+            out[:, j] = s
+
+
+def fill_features_batch(op: str, dims_arr: np.ndarray, nt: np.ndarray,
+                        col_idx: np.ndarray, out: np.ndarray) -> None:
+    """Batched :func:`fill_features_into`: ``dims_arr`` is ``(B, ndims)``,
+    ``nt`` is ``(B, K)``, ``out`` is the ``(B, K, len(col_idx))`` buffer.
+    Item ``b`` of ``out`` is bit-identical to a single-dims fill."""
+    d = tuple(dims_arr[:, i:i + 1] for i in range(dims_arr.shape[1]))
+    spec = _term_spec(op, d)
+    for j, c in enumerate(col_idx):
+        s = spec[c]
+        if type(s) is tuple:
+            np.divide(s[0], nt, out=out[:, :, j])
+        elif s is _NT:
+            out[:, :, j] = nt
+        else:
+            out[:, :, j] = s

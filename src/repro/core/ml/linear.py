@@ -15,6 +15,22 @@ def _add_bias(X: np.ndarray) -> np.ndarray:
     return np.concatenate([X, np.ones((X.shape[0], 1))], axis=1)
 
 
+def _matvec(X: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """Deterministic row-wise X @ w.
+
+    BLAS gemv processes rows in blocks whose FMA arrangement depends on row
+    position and buffer alignment, so bit-identical rows can yield
+    different low bits — which breaks tie-stability of the runtime's argmin
+    knob decision (equal-feature candidates must predict equal times).
+    einsum's fixed reduction order is alignment- and row-position-stable,
+    and normalising to one memory layout makes the result a function of the
+    VALUES alone: the same row predicts the same bits no matter which
+    buffer (reference pipeline, fast-path single, fast-path batch) it
+    arrived in.
+    """
+    return np.einsum("ij,j->i", np.ascontiguousarray(X), w)
+
+
 @register
 class LinearRegression(Estimator):
     NAME = "LinearRegression"
@@ -30,7 +46,7 @@ class LinearRegression(Estimator):
         return self
 
     def predict(self, X):
-        return _add_bias(np.asarray(X, dtype=np.float64)) @ self.coef_
+        return _matvec(_add_bias(np.asarray(X, dtype=np.float64)), self.coef_)
 
     def get_state(self):
         return {"coef": self.coef_}
@@ -57,7 +73,7 @@ class Ridge(Estimator):
         return self
 
     def predict(self, X):
-        return _add_bias(np.asarray(X, dtype=np.float64)) @ self.coef_
+        return _matvec(_add_bias(np.asarray(X, dtype=np.float64)), self.coef_)
 
     def get_state(self):
         return {"coef": self.coef_, "alpha": self.alpha}
@@ -117,7 +133,7 @@ class ElasticNet(Estimator):
         return self
 
     def predict(self, X):
-        return np.asarray(X, dtype=np.float64) @ self.coef_ + self.intercept_
+        return _matvec(np.asarray(X, dtype=np.float64), self.coef_) + self.intercept_
 
     def get_state(self):
         return {"coef": self.coef_, "intercept": self.intercept_,
@@ -170,7 +186,7 @@ class BayesianRidge(Estimator):
         return self
 
     def predict(self, X):
-        return _add_bias(np.asarray(X, dtype=np.float64)) @ self.coef_
+        return _matvec(_add_bias(np.asarray(X, dtype=np.float64)), self.coef_)
 
     def get_state(self):
         return {"coef": self.coef_, "alpha": self.alpha_, "lambda": self.lambda_}

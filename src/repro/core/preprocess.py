@@ -247,6 +247,21 @@ class PreprocessPipeline:
         Z = self.scaler.transform(Z)
         return self.pruner.transform(Z)
 
+    def fused_params(self) -> tuple:
+        """Everything the compiled fast path needs, pre-restricted to the
+        columns that survive the correlation prune:
+        ``(keep_idx, lambdas_kept | None, mean_kept, scale_kept)``.
+
+        The three stages are elementwise per column, so transforming only
+        the kept columns with these sliced parameters is bit-identical to
+        ``transform()`` followed by the prune's column selection.
+        """
+        if self.pruner.keep_ is None or self.scaler.mean_ is None:
+            raise ValueError("pipeline not fitted")
+        keep = np.asarray(self.pruner.keep_, dtype=np.int64)
+        lam = self.yj.lambdas_[keep] if self.use_yeo_johnson else None
+        return keep, lam, self.scaler.mean_[keep], self.scaler.scale_[keep]
+
     def get_state(self) -> dict:
         return {
             "use_yj": self.use_yeo_johnson,

@@ -112,11 +112,19 @@ def load_subroutine(path: str | Path) -> TunedSubroutine:
     pipeline.set_state(state["pipeline"])
     model = make_model(state["model_name"])
     model.set_state(state["model"])
-    return TunedSubroutine(
+    sub = TunedSubroutine(
         op=state["op"], dtype_bytes=int(state["dtype_bytes"]),
         knob_space=knobs, pipeline=pipeline, model=model,
         model_name=state["model_name"], log_target=bool(state["log_target"]),
         backend=str(state.get("backend", _LEGACY_BACKEND)))
+    # optional fast-path dominated-candidate analysis (absent on artifacts
+    # installed before the compiled decision engine)
+    if "fast_live_idx" in state:
+        sub.fast_live_idx = np.asarray(state["fast_live_idx"],
+                                       dtype=np.int64)
+        sub.fast_dims_lo = np.asarray(state["fast_dims_lo"], dtype=np.int64)
+        sub.fast_dims_hi = np.asarray(state["fast_dims_hi"], dtype=np.int64)
+    return sub
 
 
 class ModelRegistry:
@@ -153,6 +161,10 @@ class ModelRegistry:
                              for p in self.root.glob("*.adsala")}))
 
     def load_into(self, runtime, backend: str | None = None) -> int:
+        """Hydrate ``runtime`` with every (matching) artifact.  Each
+        ``register`` compiles the artifact's fast-path predictor up front,
+        so a served process pays the fold cost at startup, not on its
+        first uncached call."""
         subs = self.load_all(backend)
         for s in subs:
             runtime.register(s)

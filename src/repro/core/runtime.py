@@ -10,8 +10,26 @@ rate is near 1 after the first step.
 Beyond the paper's single-library setting, one runtime instance holds tuned
 model sets for several execution backends side by side: the subroutine table
 and the decision cache are keyed by ``(backend, op, dtype_bytes)``, and
-:class:`RuntimeStats` reports hit-rate per backend.  All mutation is guarded
-by a lock — the batched serving path issues concurrent selections.
+:class:`RuntimeStats` reports hit-rate per backend.
+
+Hot-path design (this is the most-called code in the serving stack):
+
+* **Cache hits are lock-free.**  The decision cache is a plain dict whose
+  reads are GIL-atomic; the authoritative LRU order lives in a mirrored
+  ``OrderedDict`` that is only touched under the lock.  A hit records its
+  key in a lock-free touch log which is folded into the LRU order on the
+  next locked operation (miss, export, import) — "relaxed LRU": recency is
+  applied in batches, eviction decisions still honour it.
+* **Hit statistics are relaxed striped counters.**  Each thread owns a
+  private hit-count dict (no lost updates, no lock, no contention); the
+  ``stats`` property aggregates base counters + stripes under the lock.
+* **Misses take the lock once**, after evaluating the model *outside* it.
+  Evaluation runs through the :class:`~repro.core.fastpath.CompiledPredictor`
+  built at ``register()`` time (falling back to the artifact's reference
+  ``select`` when compilation isn't possible).
+* **select_many** batches the misses of several pending decisions sharing a
+  subroutine into ONE fused feature-build + model-predict call — the
+  serving layer routes bucket flushes through it.
 """
 
 from __future__ import annotations
@@ -21,6 +39,7 @@ import dataclasses
 import threading
 import time
 
+from .fastpath import compile_predictor
 from .knobs import Knob
 from .tuner import TunedSubroutine
 
@@ -29,6 +48,42 @@ __all__ = ["AdsalaRuntime", "BackendStats", "BucketStats", "RuntimeStats",
 
 #: backend assumed when a caller or a legacy (v1) artifact names none
 DEFAULT_BACKEND = "pallas"
+
+#: fold the lock-free touch log into the LRU order at this size even if no
+#: miss comes along (bounds memory on hit-only workloads)
+_TOUCH_FOLD_LIMIT = 1024
+
+
+class _HitStripe:
+    """Per-thread relaxed hit counter: a run-length count for the backend
+    currently being hit (the overwhelmingly common case is a long run of one
+    backend) plus a dict of folded totals.  Only the owning thread writes;
+    the stats aggregator reads both parts under the runtime lock, and folds
+    the stripe away once its owner thread has exited."""
+    __slots__ = ("owner", "backend", "n", "counts")
+
+    def __init__(self) -> None:
+        self.owner = threading.current_thread()
+        self.backend: str | None = None
+        self.n = 0
+        self.counts: dict[str, int] = {}
+
+    def switch(self, backend: str) -> None:
+        # zero the run BEFORE folding it: a stats read racing this switch
+        # then transiently undercounts the run instead of double-counting it
+        prev = self.backend
+        n = self.n
+        self.n = 0
+        if prev is not None and n:
+            self.counts[prev] = self.counts.get(prev, 0) + n
+        self.backend = backend
+
+    def pairs(self) -> list[tuple[str, int]]:
+        out = list(self.counts.items())
+        run_backend, run_n = self.backend, self.n
+        if run_backend is not None and run_n:
+            out.append((run_backend, run_n))
+        return out
 
 
 @dataclasses.dataclass
@@ -86,33 +141,150 @@ class RuntimeStats:
 
 
 class AdsalaRuntime:
-    """Per-process decision engine for all tuned (backend, subroutine) pairs."""
+    """Per-process decision engine for all tuned (backend, subroutine) pairs.
 
-    def __init__(self, *, cache_size: int = 256) -> None:
+    ``fast_prune=True`` opts registered artifacts into dominated-candidate
+    pruning (see :mod:`~repro.core.fastpath`): the compiled fast path then
+    evaluates only the knobs the install-time dataset ever argmin-selected,
+    falling back to the full candidate set outside the dataset's dims range.
+    """
+
+    def __init__(self, *, cache_size: int = 256, fast_prune: bool = False,
+                 touch_sample: int = 16) -> None:
         # paper's behaviour = cache_size 1 (last call only)
         self._subs: dict[tuple[str, str, int], TunedSubroutine] = {}
+        self._fast: dict[tuple[str, str, int], object] = {}
         self._cache: collections.OrderedDict[tuple, Knob] = \
-            collections.OrderedDict()
+            collections.OrderedDict()      # authoritative LRU, lock-guarded
+        self._cache_mirror: dict[tuple, Knob] = {}   # lock-free read mirror
         self._cache_size = max(1, cache_size)
+        self._fast_prune = bool(fast_prune)
         self._lock = threading.RLock()
-        self.stats = RuntimeStats()
+        self._touches: list[tuple] = []    # lock-free hit log (relaxed LRU)
+        # hits log a recency touch every `touch_sample`-th hit of a thread's
+        # run (power of two; 1 = every hit, for deterministic LRU tests)
+        if touch_sample < 1 or touch_sample & (touch_sample - 1):
+            raise ValueError("touch_sample must be a power of two")
+        self._touch_mask = touch_sample - 1
+        self._hits_local = threading.local()
+        self._hit_stripes: list[_HitStripe] = []
+        self._base = RuntimeStats()        # mutated only under the lock
+        # prebound lock-free readers (the dicts/lists are mutated in place,
+        # never replaced, so these stay valid for the runtime's life)
+        self._cache_get = self._cache_mirror.get
+        self._subs_get = self._subs.get
+        self._fast_get = self._fast.get
+
+    # -- statistics -----------------------------------------------------------
+    @staticmethod
+    def _add_hits(stats: RuntimeStats, name: str, hits: int) -> None:
+        stats.calls += hits
+        stats.cache_hits += hits
+        b = stats.for_backend(name)
+        b.calls += hits
+        b.cache_hits += hits
+
+    @property
+    def stats(self) -> RuntimeStats:
+        """Aggregate snapshot: locked base counters plus the per-thread
+        relaxed hit stripes.  Exact whenever the hitting threads are
+        quiescent (e.g. after join); a read racing a live hit may lag it by
+        a moment.  Stripes of exited threads are folded into the base here,
+        so thread churn cannot grow the stripe list unboundedly."""
+        with self._lock:
+            base = self._base
+            self._prune_stripes_locked()
+            merged = RuntimeStats(
+                calls=base.calls, cache_hits=base.cache_hits,
+                default_calls=base.default_calls,
+                model_evals=base.model_evals,
+                eval_seconds=base.eval_seconds,
+                backends={n: dataclasses.replace(b)
+                          for n, b in base.backends.items()},
+                buckets={k: dataclasses.replace(b)
+                         for k, b in base.buckets.items()})
+            for stripe in self._hit_stripes:
+                for name, hits in stripe.pairs():
+                    self._add_hits(merged, name, hits)
+        return merged
+
+    def _stripe(self) -> _HitStripe:
+        """This thread's hit stripe (registered for aggregation on first
+        use).  Registration also folds away stripes of exited threads, so
+        thread churn can't leak stripes even if nobody ever reads stats."""
+        stripe = _HitStripe()
+        self._hits_local.stripe = stripe
+        with self._lock:
+            self._prune_stripes_locked()
+            self._hit_stripes.append(stripe)
+        return stripe
+
+    def _prune_stripes_locked(self) -> None:
+        """Fold exited threads' (final, immutable) counters into the base."""
+        live: list[_HitStripe] = []
+        for stripe in self._hit_stripes:
+            if stripe.owner.is_alive():
+                live.append(stripe)
+            else:
+                for name, hits in stripe.pairs():
+                    self._add_hits(self._base, name, hits)
+        self._hit_stripes[:] = live
+
+    def _record_hit(self, backend: str, key: tuple, n: int = 1) -> None:
+        """Lock-free hit accounting: thread-owned stripe + sampled touch
+        log.  select() inlines an n=1 copy of this logic on its hot path —
+        keep the two in step."""
+        try:
+            s = self._hits_local.stripe
+        except AttributeError:
+            s = self._stripe()
+        if backend is not s.backend and backend != s.backend:
+            s.switch(backend)
+        s.n += n
+        if not (s.n & self._touch_mask):
+            touches = self._touches
+            touches.append(key)
+            if len(touches) >= _TOUCH_FOLD_LIMIT:
+                with self._lock:
+                    self._fold_touches_locked()
+
+    def _fold_touches_locked(self) -> None:
+        """Apply the pending lock-free hit log to the LRU order.  Drains the
+        touch list in place (the list object is never replaced): appends
+        racing the drain land at the tail and survive for the next fold."""
+        touches = self._touches
+        if not touches:
+            return
+        pending = touches[:]
+        del touches[:len(pending)]
+        cache = self._cache
+        for key in pending:
+            if key in cache:
+                cache.move_to_end(key)
 
     # -- registration --------------------------------------------------------
     def register(self, sub: TunedSubroutine, *,
                  backend: str | None = None) -> None:
         name = backend or getattr(sub, "backend", None) or DEFAULT_BACKEND
+        # compile the fast path up front (None for stubs/uncompilable subs:
+        # select() then falls back to the artifact's reference path)
+        compiled = compile_predictor(sub, prune=self._fast_prune)
         with self._lock:
             self._subs[(name, sub.op, sub.dtype_bytes)] = sub
+            self._fast[(name, sub.op, sub.dtype_bytes)] = compiled
 
     def has(self, op: str, dtype_bytes: int,
             backend: str = DEFAULT_BACKEND) -> bool:
-        with self._lock:
-            return (backend, op, dtype_bytes) in self._subs
+        return self._subs_get((backend, op, dtype_bytes)) is not None
 
     def subroutine(self, op: str, dtype_bytes: int,
                    backend: str = DEFAULT_BACKEND) -> TunedSubroutine:
-        with self._lock:
-            return self._subs[(backend, op, dtype_bytes)]
+        return self._subs[(backend, op, dtype_bytes)]
+
+    def predictor(self, op: str, dtype_bytes: int,
+                  backend: str = DEFAULT_BACKEND):
+        """The compiled fast-path predictor, or None if uncompilable."""
+        return self._fast_get((backend, op, dtype_bytes))
 
     def backends(self) -> tuple[str, ...]:
         """Backend names with at least one registered subroutine."""
@@ -122,51 +294,154 @@ class AdsalaRuntime:
     # -- the runtime decision -------------------------------------------------
     def select(self, op: str, dims: tuple[int, ...], dtype_bytes: int = 4,
                backend: str = DEFAULT_BACKEND) -> Knob:
-        key = (backend, op, dtype_bytes, tuple(int(d) for d in dims))
-        with self._lock:
-            self.stats.calls += 1
-            bstats = self.stats.for_backend(backend)
-            bstats.calls += 1
-            hit = self._cache.get(key)
-            if hit is not None:
-                self.stats.cache_hits += 1
-                bstats.cache_hits += 1
-                self._cache.move_to_end(key)
-                return hit
-            sub = self._subs[(backend, op, dtype_bytes)]
+        if type(dims) is not tuple:
+            dims = tuple(dims)
+        key = (backend, op, dtype_bytes, dims)
+        knob = self._cache_get(key)          # lock-free GIL-atomic read
+        if knob is not None:
+            # hot hit path, accounting inlined and lock-free: run-length
+            # stripe increment + sampled LRU touch (folded on the next miss)
+            try:
+                s = self._hits_local.stripe
+            except AttributeError:
+                s = self._stripe()
+            if backend is not s.backend and backend != s.backend:
+                s.switch(backend)
+            s.n += 1
+            if not (s.n & self._touch_mask):
+                touches = self._touches
+                touches.append(key)
+                if len(touches) >= _TOUCH_FOLD_LIMIT:
+                    with self._lock:
+                        self._fold_touches_locked()
+            return knob
+        return self._select_miss(key)
+
+    def _select_miss(self, key: tuple) -> Knob:
+        backend, op, dtype_bytes, dims = key
+        sub_key = (backend, op, dtype_bytes)
+        sub = self._subs_get(sub_key)
+        if sub is None:
+            raise KeyError(sub_key)
+        fast = self._fast_get(sub_key)
         # model evaluation runs unlocked (pure numpy, deterministic) so
         # concurrent distinct-shape selections don't serialise; a racing
         # duplicate computes the same knob and the second store is a no-op
         t0 = time.perf_counter()
-        knob = sub.select(key[3])
+        knob = fast.select(dims) if fast is not None else sub.select(dims)
         dt = time.perf_counter() - t0
         with self._lock:
-            self.stats.model_evals += 1
-            self.stats.eval_seconds += dt
-            bstats = self.stats.for_backend(backend)
-            bstats.model_evals += 1
-            bstats.eval_seconds += dt
-            self._cache[key] = knob
-            self._cache.move_to_end(key)
-            while len(self._cache) > self._cache_size:
-                self._cache.popitem(last=False)
+            self._count_eval_locked(backend, dt)
+            self._store_locked(key, knob)
         return knob
+
+    def _count_eval_locked(self, backend: str, dt: float) -> None:
+        base = self._base
+        base.calls += 1
+        base.model_evals += 1
+        base.eval_seconds += dt
+        b = base.for_backend(backend)
+        b.calls += 1
+        b.model_evals += 1
+        b.eval_seconds += dt
+
+    def _store_locked(self, key: tuple, knob: Knob) -> None:
+        self._fold_touches_locked()      # honour hit recency before evicting
+        self._cache[key] = knob
+        self._cache.move_to_end(key)
+        self._cache_mirror[key] = knob
+        while len(self._cache) > self._cache_size:
+            old, _ = self._cache.popitem(last=False)
+            self._cache_mirror.pop(old, None)
 
     def select_or_default(self, op: str, dims: tuple[int, ...],
                           dtype_bytes: int, default: Knob, *,
                           backend: str = DEFAULT_BACKEND) -> Knob:
         """Graceful degradation: untuned subroutines run the default config
         (a node that lost its model files keeps serving — fault tolerance).
-        Default-path calls are recorded so `RuntimeStats` sees all traffic."""
-        with self._lock:
-            if (backend, op, dtype_bytes) not in self._subs:
-                self.stats.calls += 1
-                self.stats.default_calls += 1
-                bstats = self.stats.for_backend(backend)
-                bstats.calls += 1
-                bstats.default_calls += 1
-                return default
+        Default-path calls are recorded so `RuntimeStats` sees all traffic.
+
+        The registered-subroutine check is a lock-free read, so the common
+        cases cost one lock acquisition (default, miss) or zero (hit)
+        instead of the old check-release-reacquire round trip."""
+        if self._subs_get((backend, op, dtype_bytes)) is None:
+            with self._lock:
+                base = self._base
+                base.calls += 1
+                base.default_calls += 1
+                b = base.for_backend(backend)
+                b.calls += 1
+                b.default_calls += 1
+            return default
         return self.select(op, dims, dtype_bytes, backend=backend)
+
+    # -- batched decisions ----------------------------------------------------
+    def select_many(self, requests, *,
+                    record_hits: bool = True) -> list[Knob | None]:
+        """Batched knob selection.
+
+        ``requests`` is a sequence of ``(op, dims, dtype_bytes, backend)``
+        tuples; returns one Knob per request (``None`` where no subroutine
+        is registered — callers treat those like the select_or_default
+        fallback).  Hits resolve lock-free exactly like :meth:`select`.
+        All missing keys that share one subroutine are evaluated in a
+        single fused feature-build + model-predict call, then stored under
+        one lock acquisition.  Decisions and statistics match N individual
+        ``select`` calls (duplicate keys beyond the first count as hits).
+
+        ``record_hits=False`` keeps cache hits out of the statistics (model
+        evaluations are always recorded — they really ran).  The serving
+        prewarm uses this so speculative decision lookups don't inflate the
+        hit rate the executors' own selections report.
+        """
+        out: list[Knob | None] = [None] * len(requests)
+        misses: dict[tuple, list[int]] = {}
+        for i, (op, dims, dtype_bytes, backend) in enumerate(requests):
+            if type(dims) is not tuple:
+                dims = tuple(dims)
+            key = (backend, op, dtype_bytes, dims)
+            knob = self._cache_get(key)
+            if knob is not None:
+                if record_hits:
+                    self._record_hit(backend, key)
+                out[i] = knob
+            else:
+                misses.setdefault(key, []).append(i)
+        if not misses:
+            return out
+
+        by_sub: dict[tuple, list[tuple]] = {}
+        for key in misses:
+            by_sub.setdefault(key[:3], []).append(key)
+        resolved: dict[tuple, tuple[Knob, float]] = {}
+        for sub_key, keys in by_sub.items():
+            sub = self._subs_get(sub_key)
+            if sub is None:
+                continue
+            fast = self._fast_get(sub_key)
+            t0 = time.perf_counter()
+            if fast is not None:
+                knobs = fast.select_many([k[3] for k in keys])
+            else:
+                knobs = [sub.select(k[3]) for k in keys]
+            dt = (time.perf_counter() - t0) / len(keys)
+            for key, knob in zip(keys, knobs):
+                resolved[key] = (knob, dt)
+        if resolved:
+            with self._lock:
+                for key, (knob, dt) in resolved.items():
+                    self._count_eval_locked(key[0], dt)
+                    self._store_locked(key, knob)
+        for key, slots in misses.items():
+            hit = resolved.get(key)
+            if hit is None:
+                continue            # unregistered subroutine: leave None
+            knob = hit[0]
+            for i in slots:
+                out[i] = knob
+            if record_hits and len(slots) > 1:   # duplicate keys = hits
+                self._record_hit(key[0], key, len(slots) - 1)
+        return out
 
     # -- serving accounting ---------------------------------------------------
     def record_batch(self, op: str, dims: tuple[int, ...], dtype_bytes: int,
@@ -175,7 +450,7 @@ class AdsalaRuntime:
         shape bucket keyed like the decision cache (serving layer hook)."""
         key = (backend, op, dtype_bytes, tuple(int(d) for d in dims))
         with self._lock:
-            b = self.stats.for_bucket(key)
+            b = self._base.for_bucket(key)
             b.batches += 1
             b.requests += int(batch_size)
             b.max_batch = max(b.max_batch, int(batch_size))
@@ -185,8 +460,9 @@ class AdsalaRuntime:
         """Decision-cache contents as JSON-safe records, LRU-oldest first,
         so a restarted server can skip the cold-start model evaluations."""
         with self._lock:
-            return [{"backend": k[0], "op": k[1], "dtype_bytes": k[2],
-                     "dims": list(k[3]), "knob": knob.dict}
+            self._fold_touches_locked()
+            return [{"backend": k[0], "op": k[1], "dtype_bytes": int(k[2]),
+                     "dims": [int(d) for d in k[3]], "knob": knob.dict}
                     for k, knob in self._cache.items()]
 
     def import_cache(self, entries: list[dict]) -> int:
@@ -207,6 +483,7 @@ class AdsalaRuntime:
         """
         n = 0
         with self._lock:
+            self._fold_touches_locked()
             for e in entries:
                 key = (str(e["backend"]), str(e["op"]), int(e["dtype_bytes"]),
                        tuple(int(d) for d in e["dims"]))
@@ -217,14 +494,18 @@ class AdsalaRuntime:
                     continue
                 self._cache[key] = knob
                 self._cache.move_to_end(key)
+                self._cache_mirror[key] = knob
                 n += 1
             while len(self._cache) > self._cache_size:
-                self._cache.popitem(last=False)
+                old, _ = self._cache.popitem(last=False)
+                self._cache_mirror.pop(old, None)
         return n
 
     def clear_cache(self) -> None:
         with self._lock:
+            del self._touches[:]         # in place: hitters hold this list
             self._cache.clear()
+            self._cache_mirror.clear()   # in place: readers keep their view
 
     def cache_len(self) -> int:
         with self._lock:

@@ -42,10 +42,20 @@ class TunedSubroutine:
     reports: list[ModelReport] = dataclasses.field(default_factory=list)
     dataset: TimingDataset | None = None
     backend: str = "pallas"             # execution backend this was tuned on
+    #: dominated-candidate analysis for the compiled fast path (optional,
+    #: persisted): knob indices the model ever argmin-selects over the
+    #: install dataset's dims, and that dataset's dims bounding box
+    fast_live_idx: np.ndarray | None = None
+    fast_dims_lo: np.ndarray | None = None
+    fast_dims_hi: np.ndarray | None = None
 
     # -- runtime decision --------------------------------------------------
     def predict_times(self, dims: tuple[int, ...]) -> np.ndarray:
-        """Predicted runtime for every knob candidate at these dims."""
+        """Predicted runtime for every knob candidate at these dims.
+
+        This is the REFERENCE decision path: the runtime serves decisions
+        through :meth:`compiled` (bit-identical argmin, far lower latency)
+        and parity tests compare the two."""
         K = len(self.knob_space)
         X = F.build_features(self.op, np.tile(np.array(dims), (K, 1)),
                              self.knob_space.parallelism_vec(dims))
@@ -55,9 +65,20 @@ class TunedSubroutine:
     def select(self, dims: tuple[int, ...]) -> Knob:
         return self.knob_space.candidates[int(np.argmin(self.predict_times(dims)))]
 
+    def compiled(self, *, prune: bool = False):
+        """The cached :class:`~repro.core.fastpath.CompiledPredictor` for
+        this artifact (None when uncompilable)."""
+        cache = getattr(self, "_compiled_cache", None)
+        if cache is None:
+            cache = self._compiled_cache = {}
+        if prune not in cache:
+            from .fastpath import compile_predictor
+            cache[prune] = compile_predictor(self, prune=prune)
+        return cache[prune]
+
     # -- persistence ---------------------------------------------------------
     def get_state(self) -> dict:
-        return {
+        state = {
             "version": SCHEMA_VERSION,
             "backend": self.backend,
             "op": self.op,
@@ -69,6 +90,16 @@ class TunedSubroutine:
             "log_target": self.log_target,
             "reports": [r.row() for r in self.reports],
         }
+        # optional keys: absent on pre-fast-path artifacts, ignored by
+        # older readers — no schema bump needed
+        if self.fast_live_idx is not None:
+            state["fast_live_idx"] = np.asarray(self.fast_live_idx,
+                                                dtype=np.int64)
+            state["fast_dims_lo"] = np.asarray(self.fast_dims_lo,
+                                               dtype=np.int64)
+            state["fast_dims_hi"] = np.asarray(self.fast_dims_hi,
+                                               dtype=np.int64)
+        return state
 
 
 def install_subroutine(
@@ -121,11 +152,31 @@ def install_subroutine(
         log_target=log_target, tune_trials=tune_trials, seed=seed,
         lof_keep_mask=lof_keep)
     best = select_best(reports)
-    return TunedSubroutine(
+    sub = TunedSubroutine(
         op=op, dtype_bytes=dtype_bytes, knob_space=knob_space,
         pipeline=pipeline, model=best.model, model_name=best.name,
         log_target=log_target, reports=reports,
         dataset=ds if keep_dataset else None, backend=backend)
+    _analyze_dominated(sub, ds)
+    return sub
+
+
+def _analyze_dominated(sub: TunedSubroutine, ds: TimingDataset,
+                       chunk: int = 32) -> None:
+    """Record which knob candidates the selected model ever argmin-picks
+    over the gathered dims (plus the dims bounding box) on the artifact, so
+    the compiled fast path can optionally drop the dominated candidates
+    (``prune=True``) inside the regime that validated the drop."""
+    cp = sub.compiled()
+    if cp is None or ds.n_samples == 0:
+        return
+    chosen: list[np.ndarray] = []
+    for i in range(0, ds.n_samples, chunk):     # chunked: bounds KNN memory
+        dims_list = [tuple(int(v) for v in d) for d in ds.dims[i:i + chunk]]
+        chosen.append(np.argmin(cp.predict_times_batch(dims_list), axis=1))
+    sub.fast_live_idx = np.unique(np.concatenate(chosen)).astype(np.int64)
+    sub.fast_dims_lo = ds.dims.min(axis=0).astype(np.int64)
+    sub.fast_dims_hi = ds.dims.max(axis=0).astype(np.int64)
 
 
 def install_backend(

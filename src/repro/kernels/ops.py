@@ -36,8 +36,24 @@ __all__ = [
 ]
 
 
+@functools.lru_cache(maxsize=None)
 def DTYPE_BYTES(dtype) -> int:
     return int(jnp.dtype(dtype).itemsize)
+
+
+#: lazily bound repro.backends.resolve_backend (the backends package imports
+#: this module's knob spaces, so a top-level import would be circular; the
+#: per-call `from ... import` was measurable constant overhead on the
+#: cache-hit path)
+_resolve_backend = None
+
+
+def _backend_resolver():
+    global _resolve_backend
+    if _resolve_backend is None:
+        from repro.backends import resolve_backend
+        _resolve_backend = resolve_backend
+    return _resolve_backend
 
 
 # ---------------------------------------------------------------------------
@@ -77,9 +93,12 @@ def knob_space_for(op: str, *, small: bool = False,
     return KnobSpace("blocks", cands, parallelism_fn=_grid_parallelism)
 
 
+@functools.lru_cache(maxsize=None)
 def default_knob(op: str) -> Knob:
     """Baseline config (paper: max threads) = maximum grid parallelism =
-    smallest blocks."""
+    smallest blocks.  Cached: the parallelism argmax over the whole knob
+    space used to recompute on every call — including every cache-hit
+    call, where it dominated the remaining decision latency."""
     space = knob_space_for(op)
     return space.candidates[int(np.argmax(
         [space.parallelism(c, (4096, 4096, 4096)[: 3 if op == "gemm" else 2])
@@ -235,8 +254,7 @@ def run_op(op: str, operands: tuple, *, backend: str = "pallas",
     stack.  ``stacked`` forces the interpretation when auto-detection by
     rank is ambiguous.
     """
-    from repro.backends import resolve_backend
-    be = resolve_backend(backend)
+    be = _backend_resolver()(backend)
     if stacked is None:
         stacked = getattr(operands[0], "ndim", 2) == 3
     if be.selects_own_knob:

@@ -48,6 +48,18 @@ __all__ = ["BlasService", "ServeConfig", "ServeStats", "bucket_key"]
 #: ops the service accepts (import-light mirror of backends.L3_OPS)
 SERVABLE_OPS = ("gemm", "symm", "syrk", "syr2k", "trmm", "trsm")
 
+#: lazily bound repro.backends.resolve_backend (keeps the serving module's
+#: import graph light; the backends package pulls in jax)
+_resolve_backend = None
+
+
+def _backend_resolver():
+    global _resolve_backend
+    if _resolve_backend is None:
+        from repro.backends import resolve_backend
+        _resolve_backend = resolve_backend
+    return _resolve_backend
+
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
@@ -229,8 +241,38 @@ class BlasService:
     def flush(self) -> None:
         """Force every pending bucket onto the execution queue now."""
         with self._mutex:
-            for key in list(self._buckets):
-                self._ready.put(self._buckets.pop(key))
+            buckets = [self._buckets.pop(key) for key in list(self._buckets)]
+        self._prewarm(buckets)
+        for b in buckets:
+            self._ready.put(b)
+
+    # -- batched knob prewarm -------------------------------------------------
+    def _prewarm(self, buckets: list) -> None:
+        """One batched knob selection (``AdsalaRuntime.select_many``) for a
+        set of buckets about to execute: all uncached decisions share a
+        single fused feature-build + model-predict call instead of one
+        model evaluation per bucket inside the workers.  Keys are selected
+        under the backend name the executor will resolve to, so the
+        workers' own selections become cache hits.  Prewarm lookups of
+        already-cached keys stay out of the hit statistics
+        (``record_hits=False``) — only the executors' selections count as
+        traffic.  Best-effort — any failure just leaves the decisions to
+        the executors."""
+        if len(buckets) < 2:
+            return                    # a lone bucket gains nothing
+        requests = []
+        for b in buckets:
+            backend, op, dtype_bytes, dims = b.key[:4]
+            try:
+                backend = _backend_resolver()(backend).name
+            except Exception:        # noqa: BLE001 — unresolvable backend
+                continue
+            requests.append((op, dims, dtype_bytes, backend))
+        if len(requests) >= 2:
+            try:
+                self.runtime.select_many(requests, record_hits=False)
+            except Exception:        # noqa: BLE001 — executors still select
+                pass
 
     def drain(self, timeout: Optional[float] = None) -> bool:
         """Flush and wait until no request is in flight; True on success."""
@@ -247,8 +289,7 @@ class BlasService:
     def bucket_stats(self) -> dict[tuple, object]:
         """Per-bucket serving stats recorded on the runtime, keyed
         ``(backend, op, dtype_bytes, dims)``."""
-        with self.runtime._lock:
-            return dict(self.runtime.stats.buckets)
+        return self.runtime.stats.buckets    # stats snapshots under its lock
 
     # -- lifecycle ------------------------------------------------------------
     def close(self, timeout: float = 30.0) -> None:
@@ -286,16 +327,22 @@ class BlasService:
         while not self._closed:
             self._wake.clear()
             timeout = linger
+            aged = []
             with self._mutex:
                 now = time.monotonic()
                 for key, bucket in list(self._buckets.items()):
                     age = now - bucket.t_head
                     if age >= linger:
                         del self._buckets[key]
-                        self._ready.put(bucket)
+                        aged.append(bucket)
                     else:
                         timeout = min(timeout, linger - age)
                 idle = not self._buckets
+            if aged:
+                # one batched decision for the whole sweep, then enqueue
+                self._prewarm(aged)
+                for bucket in aged:
+                    self._ready.put(bucket)
             # empty table: sleep until a bucket opens; else until the
             # earliest linger deadline
             self._wake.wait(None if idle else timeout)
@@ -347,9 +394,8 @@ class BlasService:
         never padded: filler rows would just run as wasted extra ops."""
         if not self.config.pad_batches or n >= self.config.max_batch:
             return n
-        from repro.backends import resolve_backend
         try:
-            if not resolve_backend(backend).jit_stacked:
+            if not _backend_resolver()(backend).jit_stacked:
                 return n
         except KeyError:
             return n

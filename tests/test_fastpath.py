@@ -1,0 +1,344 @@
+"""Compiled decision fast path: argmin/bit parity against the reference
+path (all six ops x both dtypes x every persisted model family), lock-free
+hit-path concurrency (stats stay exact), and select_many equivalence with N
+individual selects."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import AdsalaRuntime, ModelRegistry, install_subroutine
+from repro.core.fastpath import CompiledPredictor, compile_predictor
+from repro.core.knobs import Knob, thread_knob_space
+from repro.kernels import ops
+
+
+class StubSub:
+    """Uncompilable TunedSubroutine stand-in (no pipeline/model): the
+    runtime must fall back to its reference ``select``."""
+
+    def __init__(self, backend: str, op: str = "gemm",
+                 dtype_bytes: int = 4) -> None:
+        self.backend = backend
+        self.op = op
+        self.dtype_bytes = dtype_bytes
+        self.knob = Knob((("bm", 128), ("bn", 128)))
+        self.evals = 0
+
+    def select(self, dims):
+        self.evals += 1
+        return self.knob
+
+#: model families present in the repo's persisted artifact store
+PERSISTED_FAMILIES = ("LinearRegression", "DecisionTree")
+
+OPS = ("gemm", "symm", "syrk", "syr2k", "trmm", "trsm")
+
+ARTIFACTS = ModelRegistry("runs/adsala/models")
+
+
+def _dims_sweep(op: str, n_random: int = 12, seed: int = 7):
+    nd = 3 if op == "gemm" else 2
+    fixed = [(16,) * nd, (64,) * nd, (512,) * nd, (2048,) * nd,
+             (33, 257, 1023)[:nd], (1024, 48, 640)[:nd]]
+    rng = np.random.default_rng(seed)
+    rand = [tuple(int(v) for v in rng.integers(8, 2048, size=nd))
+            for _ in range(n_random)]
+    return fixed + rand
+
+
+def _timer(space):
+    """Structured synthetic timer: dims- and knob-dependent (compute +
+    per-grid-cell launch overhead + block cost), so fitted models produce a
+    dims-dependent argmin structure — including exact prediction ties for
+    knobs whose surviving features coincide."""
+    def t(dims, knob):
+        d = knob.dict
+        par = space.parallelism(knob, dims)
+        work = float(np.prod(np.asarray(dims, dtype=np.float64)))
+        return 1e-9 * work / par + 3e-6 * par \
+            + 1e-8 * (d.get("bm", 1) + d.get("bn", 1))
+    return t
+
+
+@pytest.fixture(scope="module")
+def installed():
+    """One tuned artifact per (op, dtype_bytes, model family)."""
+    out = {}
+    for op in OPS:
+        space = ops.knob_space_for(op, sizes=(32, 64))
+        for dtype_bytes in (4, 8):
+            for family in PERSISTED_FAMILIES:
+                out[(op, dtype_bytes, family)] = install_subroutine(
+                    op, space, _timer(space), n_samples=10, dim_lo=16,
+                    dim_hi=256, max_footprint_bytes=10_000_000,
+                    dtype_bytes=dtype_bytes, candidates=(family,),
+                    tune_trials=1, use_lof=False, backend="cpu_blocked")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# argmin / bit parity: fast path vs reference path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("dtype_bytes", [4, 8])
+@pytest.mark.parametrize("family", PERSISTED_FAMILIES)
+def test_parity_installed(installed, op, dtype_bytes, family):
+    sub = installed[(op, dtype_bytes, family)]
+    cp = compile_predictor(sub)
+    assert cp is not None
+    for dims in _dims_sweep(op):
+        ref_t = sub.predict_times(dims)
+        fast_t = cp.predict_times(dims)
+        assert np.array_equal(ref_t, fast_t), (op, family, dims)
+        assert cp.select(dims) == sub.select(dims), (op, family, dims)
+
+
+@pytest.mark.skipif(not ARTIFACTS.root.exists(),
+                    reason="no persisted artifact store")
+def test_parity_persisted_artifacts():
+    """Zero argmin decision changes on every artifact the repo ships."""
+    subs = ARTIFACTS.load_all()
+    assert subs, "artifact store exists but is empty"
+    for sub in subs:
+        cp = compile_predictor(sub)
+        assert cp is not None, (sub.backend, sub.op)
+        for dims in _dims_sweep(sub.op, n_random=20, seed=11):
+            assert np.array_equal(cp.predict_times(dims),
+                                  sub.predict_times(dims)), \
+                (sub.backend, sub.op, dims)
+            assert cp.select(dims) == sub.select(dims), \
+                (sub.backend, sub.op, dims)
+
+
+def test_parity_thread_knob_space(installed):
+    """Thread-count spaces are detected as dims-independent (nt computed
+    once at compile time) and still match the reference bit-for-bit."""
+    base = installed[("gemm", 4, "LinearRegression")]
+    space = thread_knob_space(8)
+    sub = install_subroutine(
+        "gemm", space, lambda dims, knob: 1e-6 * (1.0 + 64.0 / knob["nt"])
+        + 1e-9 * dims[0], n_samples=10, dim_lo=16, dim_hi=256,
+        max_footprint_bytes=10_000_000, candidates=("LinearRegression",),
+        tune_trials=1, use_lof=False)
+    cp = compile_predictor(sub)
+    assert cp is not None and cp._nt_mode == "const"
+    del base
+    for dims in _dims_sweep("gemm"):
+        assert np.array_equal(cp.predict_times(dims),
+                              sub.predict_times(dims))
+        assert cp.select(dims) == sub.select(dims)
+
+
+def test_runtime_serves_fast_path_decisions(installed):
+    """register() compiles; runtime.select decisions == reference select."""
+    sub = installed[("gemm", 4, "LinearRegression")]
+    rt = AdsalaRuntime()
+    rt.register(sub)
+    assert rt.predictor("gemm", 4, backend="cpu_blocked") is not None
+    for dims in _dims_sweep("gemm", n_random=4):
+        assert rt.select("gemm", dims, 4, backend="cpu_blocked") \
+            == sub.select(dims)
+
+
+def test_uncompilable_sub_falls_back_to_reference():
+    rt = AdsalaRuntime()
+    stub = StubSub("b0")
+    rt.register(stub)
+    assert rt.predictor("gemm", 4, backend="b0") is None
+    assert rt.select("gemm", (32, 32, 32), 4, backend="b0") == stub.knob
+    assert stub.evals == 1
+
+
+# ---------------------------------------------------------------------------
+# dominated-candidate pruning (opt-in)
+# ---------------------------------------------------------------------------
+
+def test_dominated_prune_analysis_persisted(installed, tmp_path):
+    sub = installed[("gemm", 4, "LinearRegression")]
+    assert sub.fast_live_idx is not None
+    assert 0 < sub.fast_live_idx.size <= len(sub.knob_space)
+    assert sub.fast_dims_lo.shape == (3,) and sub.fast_dims_hi.shape == (3,)
+    # round-trips through the registry
+    reg = ModelRegistry(tmp_path)
+    reg.save(sub)
+    back = reg.load_all()[0]
+    assert np.array_equal(back.fast_live_idx, sub.fast_live_idx)
+    assert np.array_equal(back.fast_dims_lo, sub.fast_dims_lo)
+    assert np.array_equal(back.fast_dims_hi, sub.fast_dims_hi)
+
+
+def test_dominated_prune_semantics(installed):
+    sub = installed[("gemm", 4, "LinearRegression")]
+    cp = compile_predictor(sub, prune=True)
+    full = compile_predictor(sub)
+    lo, hi = sub.fast_dims_lo, sub.fast_dims_hi
+    live = set(int(i) for i in sub.fast_live_idx)
+    if len(live) < len(sub.knob_space):
+        assert cp._live is not None
+        # in-bounds dims: decision restricted to the live set, equal to the
+        # argmin over the live candidates of the full prediction vector
+        mid = tuple(int((a + b) // 2) for a, b in zip(lo, hi))
+        idx = cp.select_index(mid)
+        assert idx in live
+        t = full.predict_times(mid)
+        live_sorted = sorted(live)
+        assert idx == live_sorted[int(np.argmin(t[live_sorted]))]
+    # out-of-bounds dims (extrapolation): full-K evaluation, exact parity
+    far = tuple(int(h * 2 + 1) for h in hi)
+    assert cp.select(far) == sub.select(far)
+
+
+# ---------------------------------------------------------------------------
+# lock-free hit path under concurrency: stats stay exact
+# ---------------------------------------------------------------------------
+
+def test_lockfree_hits_stats_exact_under_stress():
+    rt = AdsalaRuntime(cache_size=64)
+    for name in ("b0", "b1"):
+        rt.register(StubSub(name))
+    default = Knob((("bm", 16), ("bn", 16)))
+    shapes = [(32 * i, 32, 32) for i in range(1, 9)]
+    # prefill so the stress is hit-dominated
+    for name in ("b0", "b1"):
+        for d in shapes:
+            rt.select("gemm", d, 4, backend=name)
+    prefill = rt.stats
+    n_threads, n_iters = 8, 400
+    errors = []
+
+    def worker(tid):
+        rng = np.random.default_rng(tid)
+        try:
+            for i in range(n_iters):
+                d = shapes[int(rng.integers(len(shapes)))]
+                be = ("b0", "b1")[int(rng.integers(2))]
+                if i % 10 == 0:
+                    rt.select_or_default("gemm", d, 4, default,
+                                         backend="untuned")
+                else:
+                    rt.select("gemm", d, 4, backend=be)
+        except Exception as e:           # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    s = rt.stats
+    assert s.calls == prefill.calls + n_threads * n_iters
+    # every call is exactly one of hit / model eval / default
+    assert s.calls == s.cache_hits + s.model_evals + s.default_calls
+    # aggregate counters == per-backend sums
+    per = list(s.backends.values())
+    for counter in ("calls", "cache_hits", "default_calls", "model_evals"):
+        assert getattr(s, counter) == sum(getattr(b, counter) for b in per)
+    # all stress selects after prefill were hits or defaults (no re-evals)
+    assert s.model_evals == prefill.model_evals
+
+
+# ---------------------------------------------------------------------------
+# select_many == N x select
+# ---------------------------------------------------------------------------
+
+def _fresh_runtime(installed):
+    rt = AdsalaRuntime()
+    rt.register(installed[("gemm", 4, "LinearRegression")])
+    rt.register(installed[("symm", 4, "DecisionTree")])
+    return rt
+
+
+def test_select_many_equivalent_to_selects(installed):
+    gemm_dims = _dims_sweep("gemm", n_random=6)
+    symm_dims = _dims_sweep("symm", n_random=6)
+    reqs = [("gemm", d, 4, "cpu_blocked") for d in gemm_dims] \
+         + [("symm", d, 4, "cpu_blocked") for d in symm_dims] \
+         + [("gemm", gemm_dims[0], 4, "cpu_blocked")]   # duplicate key
+
+    batched = _fresh_runtime(installed)
+    got = batched.select_many(reqs)
+
+    sequential = _fresh_runtime(installed)
+    want = [sequential.select(op, d, b, backend=be)
+            for op, d, b, be in reqs]
+    assert got == want
+    sb, ss = batched.stats, sequential.stats
+    assert (sb.calls, sb.cache_hits, sb.model_evals) == \
+        (ss.calls, ss.cache_hits, ss.model_evals)
+    # a second batched pass is all hits
+    assert batched.select_many(reqs) == want
+    assert batched.stats.model_evals == sb.model_evals
+
+
+def test_select_many_mixed_hits_and_unregistered(installed):
+    rt = _fresh_runtime(installed)
+    d0 = (64, 64, 64)
+    warm = rt.select("gemm", d0, 4, backend="cpu_blocked")
+    out = rt.select_many([
+        ("gemm", d0, 4, "cpu_blocked"),          # hit
+        ("gemm", (96, 96, 96), 4, "cpu_blocked"),  # miss
+        ("trsm", (64, 64), 4, "cpu_blocked"),    # unregistered -> None
+    ])
+    assert out[0] == warm
+    assert out[1] == rt.subroutine("gemm", 4, "cpu_blocked").select(
+        (96, 96, 96))
+    assert out[2] is None
+    s = rt.stats
+    assert s.model_evals == 2 and s.cache_hits == 1
+
+
+def test_select_many_empty():
+    assert AdsalaRuntime().select_many([]) == []
+
+
+def test_select_many_record_hits_false_keeps_hits_out_of_stats(installed):
+    rt = _fresh_runtime(installed)
+    d0 = (64, 64, 64)
+    rt.select("gemm", d0, 4, backend="cpu_blocked")
+    before = rt.stats
+    out = rt.select_many(
+        [("gemm", d0, 4, "cpu_blocked"),                # cached: silent
+         ("gemm", (96, 96, 96), 4, "cpu_blocked")],     # miss: recorded
+        record_hits=False)
+    assert out[0] is not None and out[1] is not None
+    s = rt.stats
+    assert s.cache_hits == before.cache_hits            # no synthetic hits
+    assert s.model_evals == before.model_evals + 1      # real eval counted
+    assert s.calls == before.calls + 1
+
+
+def test_resolve_backend_reprobes_availability():
+    """A memoized resolution must not outlive the backend's availability."""
+    from repro.backends import (get_backend, register_backend,
+                                resolve_backend, unregister_backend)
+    from repro.backends.base import Backend
+
+    class Flaky(Backend):
+        name = "flaky"
+        up = True
+
+        def is_available(self):
+            return self.up
+
+        def knob_space(self, op, *, sizes=None):
+            return get_backend("ref").knob_space(op)
+
+        def execute(self, op, operands, knob=None, **kw):
+            raise AssertionError("never executed in this test")
+
+    be = Flaky()
+    register_backend(be)
+    try:
+        assert resolve_backend("flaky") is be
+        assert resolve_backend("flaky") is be           # memo hit
+        be.up = False                                   # no registry change
+        assert resolve_backend("flaky").name == "ref"   # falls back
+        be.up = True
+        assert resolve_backend("flaky") is be
+    finally:
+        unregister_backend("flaky")

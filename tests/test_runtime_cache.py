@@ -92,7 +92,9 @@ def test_stats_consistent_under_concurrent_mixed_backend_load():
 # ---------------------------------------------------------------------------
 
 def test_lru_eviction_order():
-    rt = AdsalaRuntime(cache_size=3)
+    # touch_sample=1: every hit logs a recency touch, so the relaxed-LRU
+    # fold reproduces exact LRU ordering deterministically
+    rt = AdsalaRuntime(cache_size=3, touch_sample=1)
     sub = StubSub("b0")
     rt.register(sub)
 
