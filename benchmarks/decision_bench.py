@@ -4,26 +4,31 @@
 The paper's selection metric ``s = t_orig / (t_ADSALA + t_eval)`` charges
 every microsecond of decision latency against the speedup of every uncached
 BLAS call, so this bench tracks the three latencies that matter and pins
-them against frozen copies of the pre-fast-path (PR 2) implementations:
+them against frozen copies of the superseded implementations:
 
   cold   one uncached knob decision per model family — reference path
          (np.tile + pipeline object + Python parallelism loop) vs the
-         compiled fast path (fused preallocated evaluation), plus the
-         dominated-candidate pruned variant where the artifact allows it;
+         compiled fast path, plus the dominated-candidate pruned variant
+         where the artifact allows it.  Each family is ALSO measured
+         through a frozen copy of the PR-3 lowering (brute-force KNN
+         distance matrix, per-level ArrayTree loop, where-predicated
+         stacked forest) so the v2 engine's per-family trajectory
+         (``speedup_vs_pr3``) is a same-host, same-run comparison;
   hit    one cached decision through the full per-call path run_op takes
-         (default-knob resolution + select_or_default) — pre-PR that
-         recomputed a parallelism argmax over the whole knob space and took
-         the runtime lock; now both are cached/lock-free — and the raw
-         runtime.select hit;
+         (default-knob resolution + select_or_default) vs the frozen PR-2
+         runtime, and the raw runtime.select hit;
   batch  select_many over B distinct uncached keys vs B individual selects.
 
-Every number is the median of ``--runs`` runs.  Results are persisted to
-``BENCH_decision.json`` at the repo root (perf trajectory).  ``--smoke``
-runs a tiny configuration, asserts fast/reference argmin parity and sanity
-(fast <= reference), and skips the JSON write — the CI gate.
+Every number is the median of ``--runs`` runs.  Results are appended as a
+per-PR entry (``--entry-id``) to ``BENCH_decision.json`` at the repo root —
+the perf-trajectory file ``scripts/bench_diff.py`` gates CI against.
+``--smoke`` runs a tiny configuration, asserts fast/reference argmin parity
+and sanity (fast <= reference), and skips the JSON write unless ``--json``
+asks for the dimensionless smoke metrics (the CI regression gate input).
 
     PYTHONPATH=src python benchmarks/decision_bench.py
     PYTHONPATH=src python benchmarks/decision_bench.py --smoke
+    PYTHONPATH=src python benchmarks/decision_bench.py --smoke --json /tmp/s.json
 """
 
 from __future__ import annotations
@@ -55,9 +60,11 @@ from repro.kernels import ops  # noqa: E402
 REPO_ROOT = Path(__file__).resolve().parents[1]
 OUT_PATH = REPO_ROOT / "BENCH_decision.json"
 
+_LEAF = -1
+
 
 # ---------------------------------------------------------------------------
-# frozen pre-PR reference implementations (PR 2 tree)
+# frozen pre-PR reference implementations
 # ---------------------------------------------------------------------------
 
 class LegacyRuntime:
@@ -116,6 +123,103 @@ def legacy_default_knob(op: str):
     return ops.default_knob.__wrapped__(op)
 
 
+# -- frozen PR-3 model lowerings (the fast path this PR replaces) -----------
+
+class _Pr3StackedForest:
+    """Frozen PR-3 ensemble fold: where-predicated level loop with the
+    all-leaves early-exit scan."""
+
+    def __init__(self, trees) -> None:
+        offsets = np.cumsum([0] + [t.feature.size for t in trees[:-1]])
+        self.roots = offsets.astype(np.int64)
+        self.feature = np.concatenate([t.feature for t in trees])
+        self.threshold = np.concatenate([t.threshold for t in trees])
+        self.left = np.concatenate(
+            [t.left + o for t, o in zip(trees, offsets)])
+        self.right = np.concatenate(
+            [t.right + o for t, o in zip(trees, offsets)])
+        self.value = np.concatenate([t.value for t in trees])
+        self.depth = max(t.depth for t in trees)
+
+    def descend(self, X):
+        N = X.shape[0]
+        node = np.repeat(self.roots[:, None], N, axis=1)
+        rows = np.arange(N)[None, :]
+        for _ in range(self.depth + 1):
+            f = self.feature[node]
+            is_split = f != _LEAF
+            if not is_split.any():
+                break
+            fx = X[rows, np.maximum(f, 0)]
+            go_left = fx <= self.threshold[node]
+            nxt = np.where(go_left, self.left[node], self.right[node])
+            node = np.where(is_split, nxt, node)
+        return self.value[node]
+
+
+def pr3_predict_fn(model):
+    """The predict the PR-3 compiled engine served for ``model`` (frozen:
+    timing baseline only, current code never runs this)."""
+    name = getattr(model, "NAME", None)
+    if name == "KNN":
+        def knn_brute(X):        # full distance matrix + argpartition
+            X = np.asarray(X, dtype=np.float64)
+            k = min(model.k, model.X_.shape[0])
+            d2 = ((X[:, None, :] - model.X_[None, :, :]) ** 2).sum(-1)
+            nn = np.argpartition(d2, k - 1, axis=1)[:, :k]
+            ny = model.y_[nn]
+            if model.weights == "distance":
+                nd = np.sqrt(np.take_along_axis(d2, nn, axis=1))
+                w = 1.0 / np.maximum(nd, 1e-12)
+                return (w * ny).sum(1) / w.sum(1)
+            return ny.mean(1)
+        return knn_brute
+    single = getattr(model, "tree_", None)
+    if single is not None and name in ("DecisionTree", "DistilledTree"):
+        return single.predict    # PR-3 served single trees unfolded
+    trees = getattr(model, "trees_", None)
+    if not trees:
+        return model.predict     # linear family: unchanged since PR-3
+    forest = _Pr3StackedForest(list(trees))
+    if name == "RandomForest":
+        return lambda Z: np.mean(forest.descend(Z), axis=0)
+    if name == "XGBoost":
+        base, lr = float(model.base_), float(model.learning_rate)
+
+        def xgb(Z):
+            P = forest.descend(Z)
+            out = np.full(Z.shape[0], base)
+            for i in range(P.shape[0]):
+                out += lr * P[i]
+            return out
+        return xgb
+    if name == "AdaBoost":
+        logw = np.log(1.0 / np.maximum(model.betas_, 1e-300))
+        half = 0.5 * logw.sum()
+
+        def ada(Z):
+            preds = np.ascontiguousarray(forest.descend(Z).T)
+            order = np.argsort(preds, axis=1)
+            sp = np.take_along_axis(preds, order, axis=1)
+            cum = np.cumsum(logw[order], axis=1)
+            pick = (cum >= half).argmax(axis=1)
+            return sp[np.arange(preds.shape[0]), pick]
+        return ada
+    return model.predict
+
+
+def pr3_compiled(sub):
+    """A CompiledPredictor downgraded to the PR-3 lowering: identical
+    feature build + fused transform, frozen predict, no duplicate-row
+    fold, no raw-threshold folding — isolates exactly what this PR
+    changed, on this host."""
+    cp = compile_predictor(sub)
+    cp._predict = pr3_predict_fn(sub.model)
+    cp._dedup = False
+    cp._skip_transform = False     # PR-3 transformed on every decision
+    return cp
+
+
 # ---------------------------------------------------------------------------
 # measurement helpers
 # ---------------------------------------------------------------------------
@@ -155,16 +259,39 @@ def _install(op: str, family: str, *, sizes, n_samples: int):
 # the three benches
 # ---------------------------------------------------------------------------
 
-def bench_cold(families, *, sizes, n_samples, runs, inner, dims=(512, 384, 640)):
-    """Per model family: reference vs fast (vs fast+prune) uncached eval."""
+def bench_cold(families, *, sizes, n_samples, runs, inner,
+               dims=(512, 384, 640)):
+    """Per model family: reference vs fast (vs fast+prune, vs the frozen
+    PR-3 lowering) uncached eval."""
     out = {}
     for family in families:
         sub = _install("gemm", family, sizes=sizes, n_samples=n_samples)
         cp = sub.compiled()
-        ref = median_us(lambda: sub.select(dims), runs=runs, inner=inner)
-        fast = median_us(lambda: cp.select(dims), runs=runs, inner=inner)
+        cp3 = pr3_compiled(sub)
+        # families whose lowering this PR did not touch (linear einsum)
+        # run byte-for-byte the same code as PR-3: report the identity
+        # instead of timing the same instructions twice and calling the
+        # host jitter a trajectory
+        unchanged = (cp3._predict == cp._predict
+                     and not cp._skip_transform and not cp._dedup)
+        # interleave the timed loops so host-speed drift hits all three
+        # paths alike (ratios stay fair even when the box is jittery)
+        ref_r, fast_r, pr3_r = [], [], []
+        for _ in range(runs):
+            ref_r.append(_time_us(lambda: sub.select(dims),
+                                  max(inner // 8, 10)))
+            fast_r.append(_time_us(lambda: cp.select(dims), inner))
+            if not unchanged:
+                pr3_r.append(_time_us(lambda: cp3.select(dims),
+                                      max(inner // 4, 10)))
+        ref = statistics.median(ref_r)
+        fast = statistics.median(fast_r)
+        pr3 = fast if unchanged else statistics.median(pr3_r)
         row = {"reference_us": round(ref, 2), "fast_us": round(fast, 2),
-               "speedup": round(ref / fast, 2), "K": len(sub.knob_space)}
+               "fast_pr3_us": round(pr3, 2),
+               "speedup": round(ref / fast, 2),
+               "speedup_vs_pr3": round(pr3 / fast, 2),
+               "lowering": cp.lowering, "K": len(sub.knob_space)}
         pruned = sub.compiled(prune=True)
         if pruned is not None and pruned._live is not None:
             mid = tuple(int((a + b) // 2) for a, b in
@@ -172,6 +299,8 @@ def bench_cold(families, *, sizes, n_samples, runs, inner, dims=(512, 384, 640))
             row["fast_pruned_us"] = round(median_us(
                 lambda: pruned.select(mid), runs=runs, inner=inner), 2)
             row["live_K"] = int(sub.fast_live_idx.size)
+        if sub.fast_band_idx is not None:
+            row["band_K"] = int(sub.fast_band_idx.size)
         # parity gate: the fast path must agree with the reference argmin
         rng = np.random.default_rng(3)
         for _ in range(25):
@@ -253,6 +382,30 @@ def bench_batch(sub, *, runs, batch=64):
     }
 
 
+def run_suite(families, *, sizes, n_samples, runs, inner, cold_inner):
+    """One full measurement pass; returns (cold, hit, batch, summary)."""
+    cold = bench_cold(families, sizes=sizes, n_samples=n_samples,
+                      runs=runs, inner=cold_inner)
+    hit_sub = _install("gemm", "LinearRegression", sizes=sizes,
+                       n_samples=n_samples)
+    hit = bench_hit(hit_sub, runs=runs, inner=inner)
+    batch = bench_batch(hit_sub, runs=runs)
+    cold_speedups = [row["speedup"] for row in cold.values()]
+    summary = {
+        "cold_median_speedup": round(statistics.median(cold_speedups), 2),
+        "cold_min_speedup": round(min(cold_speedups), 2),
+        "cold_median_speedup_vs_pr3": round(statistics.median(
+            [r["speedup_vs_pr3"] for r in cold.values()]), 2),
+        "hit_call_path_speedup": hit["call_path_speedup"],
+        "batch_speedup": batch["speedup"],
+    }
+    for fam, key in (("KNN", "knn_speedup_vs_pr3"),
+                     ("DecisionTree", "dtree_speedup_vs_pr3")):
+        if fam in cold:
+            summary[key] = cold[fam]["speedup_vs_pr3"]
+    return cold, hit, batch, summary
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--runs", type=int, default=3,
@@ -261,54 +414,48 @@ def main(argv=None) -> int:
                    help="timed iterations per run (hit path)")
     p.add_argument("--cold-inner", type=int, default=300,
                    help="timed iterations per run (cold path)")
-    p.add_argument("--families", nargs="*", default=list(PAPER_CANDIDATES),
+    p.add_argument("--families", nargs="*",
+                   default=list(PAPER_CANDIDATES) + ["DistilledTree"],
                    help="model families to bench cold")
     p.add_argument("--smoke", action="store_true",
                    help="tiny config, parity + sanity asserts, no JSON")
+    p.add_argument("--json", type=Path, default=None,
+                   help="with --smoke: write the smoke metrics JSON here "
+                        "(the bench_diff CI gate input)")
+    p.add_argument("--entry-id", default="pr4",
+                   help="entry key in the BENCH_decision.json trajectory")
     p.add_argument("--out", type=Path, default=OUT_PATH)
     args = p.parse_args(argv)
 
     if args.smoke:
-        args.families = ["LinearRegression", "DecisionTree"]
+        args.families = ["LinearRegression", "DecisionTree", "KNN"]
         sizes, n_samples = (32, 64), 10
-        args.inner, args.cold_inner, args.runs = 200, 30, 2
+        args.inner, args.cold_inner, args.runs = 200, 30, 3
     else:
         sizes, n_samples = (128, 256, 512), 60
 
     print(f"[decision_bench] cold eval: {len(args.families)} families "
           f"(K={len(ops.knob_space_for('gemm', sizes=sizes))}, "
           f"median of {args.runs})")
-    cold = bench_cold(args.families, sizes=sizes, n_samples=n_samples,
-                      runs=args.runs, inner=args.cold_inner)
+    cold, hit, batch, summary = run_suite(
+        args.families, sizes=sizes, n_samples=n_samples, runs=args.runs,
+        inner=args.inner, cold_inner=args.cold_inner)
     for fam, row in cold.items():
         extra = (f"  pruned {row['fast_pruned_us']}us (live K="
                  f"{row['live_K']})" if "fast_pruned_us" in row else "")
         print(f"  {fam:>18}: ref {row['reference_us']:>8.1f}us  "
-              f"fast {row['fast_us']:>7.2f}us  {row['speedup']:>5.1f}x"
-              + extra)
-
-    hit_sub = _install("gemm", "LinearRegression", sizes=sizes,
-                       n_samples=n_samples)
-    hit = bench_hit(hit_sub, runs=args.runs, inner=args.inner)
+              f"fast {row['fast_us']:>7.2f}us  {row['speedup']:>5.1f}x  "
+              f"pr3 {row['fast_pr3_us']:>8.1f}us "
+              f"({row['speedup_vs_pr3']:.1f}x vs pr3)" + extra)
     print(f"[decision_bench] cache hit: raw select "
           f"{hit['select_pre_pr_us']}us -> {hit['select_us']}us "
           f"({hit['select_speedup']}x); full call path "
           f"{hit['call_path_pre_pr_us']}us -> {hit['call_path_us']}us "
           f"({hit['call_path_speedup']}x)")
-
-    batch = bench_batch(hit_sub, runs=args.runs)
     print(f"[decision_bench] batched: {batch['batch']} keys "
           f"{batch['n_selects_us']}us -> {batch['select_many_us']}us "
           f"({batch['speedup']}x, "
           f"{batch['select_many_keys_per_s']} keys/s)")
-
-    cold_speedups = [row["speedup"] for row in cold.values()]
-    summary = {
-        "cold_median_speedup": round(statistics.median(cold_speedups), 2),
-        "cold_min_speedup": round(min(cold_speedups), 2),
-        "hit_call_path_speedup": hit["call_path_speedup"],
-        "batch_speedup": batch["speedup"],
-    }
     print(f"[decision_bench] summary: {summary}")
 
     if args.smoke:
@@ -316,11 +463,15 @@ def main(argv=None) -> int:
             "fast path slower than reference"
         assert summary["hit_call_path_speedup"] > 1.0, \
             "hit path slower than pre-PR"
+        if args.json is not None:
+            args.json.write_text(json.dumps(
+                {"bench": "decision-smoke", "summary": summary,
+                 "cold_model_eval": cold}, indent=1) + "\n")
+            print(f"[decision_bench] wrote smoke metrics {args.json}")
         print("[decision_bench] smoke OK (parity + latency sanity)")
         return 0
 
-    payload = {
-        "bench": "decision",
+    entry = {
         "host": {"platform": platform.platform(),
                  "python": platform.python_version(),
                  "numpy": np.__version__},
@@ -332,8 +483,27 @@ def main(argv=None) -> int:
         "batched_selection": batch,
         "summary": summary,
     }
+    # dimensionless smoke metrics for the CI regression gate
+    print("[decision_bench] smoke baseline for bench_diff ...")
+    s_cold, s_hit, s_batch, s_summary = run_suite(
+        ["LinearRegression", "DecisionTree", "KNN"], sizes=(32, 64),
+        n_samples=10, runs=3, inner=200, cold_inner=30)
+    entry["smoke_baseline"] = {
+        "summary": s_summary,
+        "cold_speedups": {f: r["speedup"] for f, r in s_cold.items()},
+    }
+
+    payload = {"bench": "decision", "entries": {}}
+    if args.out.exists():
+        prior = json.loads(args.out.read_text())
+        if "entries" in prior:
+            payload["entries"] = prior["entries"]
+        else:                    # migrate the single-entry PR-3 layout
+            prior.pop("bench", None)
+            payload["entries"]["pr3"] = prior
+    payload["entries"][args.entry_id] = entry
     args.out.write_text(json.dumps(payload, indent=1) + "\n")
-    print(f"[decision_bench] wrote {args.out}")
+    print(f"[decision_bench] wrote {args.out} (entry {args.entry_id!r})")
     return 0
 
 

@@ -35,6 +35,13 @@ class DistilledTree(Estimator):
         self.seed = seed
         self.tree_ = ArrayTree()
 
+    @property
+    def trees_(self) -> tuple:
+        """Uniform tree-model interface: a distilled model is a single-tree
+        ensemble, so the compiled decision engine's predicated lowering
+        (see :mod:`repro.core.fastpath`) applies unchanged."""
+        return (self.tree_,)
+
     def fit(self, X, y):
         X = np.asarray(X, dtype=np.float64)
         y = np.asarray(y, dtype=np.float64)

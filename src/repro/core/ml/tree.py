@@ -101,6 +101,25 @@ class ArrayTree:
             node = np.where(is_split, nxt, node)
         return self.value[node]
 
+    # -- predicated export ----------------------------------------------------
+    def predicated_arrays(self) -> tuple:
+        """``(feature, threshold, left, right)`` with leaves rewritten as
+        self-loops: a leaf keeps feature 0, threshold ``+inf`` (every
+        ``x <= +inf`` comparison goes left) and both children pointing back
+        at itself.  Descending this layout a *fixed* number of levels is
+        branchless — no per-level "all rows done?" check — and lands on the
+        same node as the reference early-exit descent, because a finished
+        row just spins on its leaf.  Comparisons and index lookups only, so
+        any descent over these arrays is bit-identical to :meth:`predict`.
+        """
+        leaf = self.feature < 0
+        nodes = np.arange(self.feature.size, dtype=np.int64)
+        feat = np.where(leaf, 0, self.feature).astype(np.int64)
+        thr = np.where(leaf, np.inf, self.threshold)
+        left = np.where(leaf, nodes, self.left.astype(np.int64))
+        right = np.where(leaf, nodes, self.right.astype(np.int64))
+        return feat, thr, left, right
+
     # -- persistence ----------------------------------------------------------
     def get_state(self) -> dict:
         return {"feature": self.feature, "threshold": self.threshold,
@@ -171,6 +190,13 @@ class DecisionTree(Estimator):
         self.max_features = max_features
         self.seed = seed
         self.tree_ = ArrayTree()
+
+    @property
+    def trees_(self) -> tuple:
+        """Uniform tree-model interface (ensembles expose ``trees_`` too):
+        the compiled decision engine lowers every tree family through one
+        table-driven representation."""
+        return (self.tree_,)
 
     def fit(self, X, y):
         X = np.asarray(X, dtype=np.float64)

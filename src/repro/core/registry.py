@@ -124,6 +124,14 @@ def load_subroutine(path: str | Path) -> TunedSubroutine:
                                        dtype=np.int64)
         sub.fast_dims_lo = np.asarray(state["fast_dims_lo"], dtype=np.int64)
         sub.fast_dims_hi = np.asarray(state["fast_dims_hi"], dtype=np.int64)
+    # optional confidence-band live set and opt-in KNN coreset (PR 4)
+    if "fast_band_idx" in state:
+        sub.fast_band_idx = np.asarray(state["fast_band_idx"],
+                                       dtype=np.int64)
+        sub.fast_band_pct = float(state["fast_band_pct"])
+    if "fast_knn_coreset" in state:
+        sub.fast_knn_coreset = np.asarray(state["fast_knn_coreset"],
+                                          dtype=np.int64)
     return sub
 
 

@@ -23,10 +23,18 @@ Hot-path design (this is the most-called code in the serving stack):
 * **Hit statistics are relaxed striped counters.**  Each thread owns a
   private hit-count dict (no lost updates, no lock, no contention); the
   ``stats`` property aggregates base counters + stripes under the lock.
-* **Misses take the lock once**, after evaluating the model *outside* it.
-  Evaluation runs through the :class:`~repro.core.fastpath.CompiledPredictor`
-  built at ``register()`` time (falling back to the artifact's reference
-  ``select`` when compilation isn't possible).
+* **Misses are sharded per ``(backend, op)``.**  Each shard owns a lock, an
+  in-flight table, and its eval counters: concurrent misses on *different*
+  subroutines never touch the same lock, and concurrent misses on the
+  *same* key coalesce — one thread evaluates, the rest wait on the shard's
+  in-flight entry and count as hits (the knob they got was served from a
+  computation already paid for).  Evaluation itself runs with NO lock held,
+  through the :class:`~repro.core.fastpath.CompiledPredictor` built at
+  ``register()`` time (falling back to the artifact's reference ``select``
+  when compilation isn't possible).  The single remaining global-lock
+  section is the LRU store — a dict insert plus occasional eviction; the
+  relaxed-LRU touch fold now runs only when an eviction is actually due,
+  not on every miss.
 * **select_many** batches the misses of several pending decisions sharing a
   subroutine into ONE fused feature-build + model-predict call — the
   serving layer routes bucket flushes through it.
@@ -52,6 +60,35 @@ DEFAULT_BACKEND = "pallas"
 #: fold the lock-free touch log into the LRU order at this size even if no
 #: miss comes along (bounds memory on hit-only workloads)
 _TOUCH_FOLD_LIMIT = 1024
+
+
+class _Inflight:
+    """One in-progress model evaluation: followers wait on ``event`` and
+    read ``knob`` (None means the leader failed — fall back to a local
+    evaluation)."""
+    __slots__ = ("event", "knob")
+
+    def __init__(self) -> None:
+        self.event = threading.Event()
+        self.knob: Knob | None = None
+
+
+class _Shard:
+    """Per-``(backend, op)`` miss-path state: its own lock, the in-flight
+    evaluation table (duplicate-key coalescing), and relaxed eval counters
+    (folded into :class:`RuntimeStats` by the ``stats`` aggregator)."""
+    __slots__ = ("lock", "inflight", "model_evals", "eval_seconds")
+
+    def __init__(self) -> None:
+        self.lock = threading.Lock()
+        self.inflight: dict[tuple, _Inflight] = {}
+        self.model_evals = 0
+        self.eval_seconds = 0.0
+
+    def count_eval(self, dt: float, n: int = 1) -> None:
+        with self.lock:
+            self.model_evals += n
+            self.eval_seconds += dt
 
 
 class _HitStripe:
@@ -146,19 +183,26 @@ class AdsalaRuntime:
     ``fast_prune=True`` opts registered artifacts into dominated-candidate
     pruning (see :mod:`~repro.core.fastpath`): the compiled fast path then
     evaluates only the knobs the install-time dataset ever argmin-selected,
-    falling back to the full candidate set outside the dataset's dims range.
+    falling back to the full candidate set outside the dataset's dims
+    range.  ``fast_prune="band"`` uses the confidence-band live set instead
+    (every knob whose prediction ever came within the persisted band of the
+    winner — a robust superset).  ``fast_knn_coreset=True`` opts KNN
+    artifacts into their persisted inexact subsample.
     """
 
-    def __init__(self, *, cache_size: int = 256, fast_prune: bool = False,
-                 touch_sample: int = 16) -> None:
+    def __init__(self, *, cache_size: int = 256, fast_prune=False,
+                 touch_sample: int = 16,
+                 fast_knn_coreset: bool = False) -> None:
         # paper's behaviour = cache_size 1 (last call only)
         self._subs: dict[tuple[str, str, int], TunedSubroutine] = {}
         self._fast: dict[tuple[str, str, int], object] = {}
+        self._shards: dict[tuple[str, str], _Shard] = {}
         self._cache: collections.OrderedDict[tuple, Knob] = \
             collections.OrderedDict()      # authoritative LRU, lock-guarded
         self._cache_mirror: dict[tuple, Knob] = {}   # lock-free read mirror
         self._cache_size = max(1, cache_size)
-        self._fast_prune = bool(fast_prune)
+        self._fast_prune = fast_prune
+        self._fast_knn_coreset = bool(fast_knn_coreset)
         self._lock = threading.RLock()
         self._touches: list[tuple] = []    # lock-free hit log (relaxed LRU)
         # hits log a recency touch every `touch_sample`-th hit of a thread's
@@ -174,6 +218,7 @@ class AdsalaRuntime:
         self._cache_get = self._cache_mirror.get
         self._subs_get = self._subs.get
         self._fast_get = self._fast.get
+        self._shards_get = self._shards.get
 
     # -- statistics -----------------------------------------------------------
     @staticmethod
@@ -206,6 +251,16 @@ class AdsalaRuntime:
             for stripe in self._hit_stripes:
                 for name, hits in stripe.pairs():
                     self._add_hits(merged, name, hits)
+            for (backend, _op), shard in self._shards.items():
+                evals, secs = shard.model_evals, shard.eval_seconds
+                if evals or secs:
+                    merged.calls += evals
+                    merged.model_evals += evals
+                    merged.eval_seconds += secs
+                    b = merged.for_backend(backend)
+                    b.calls += evals
+                    b.model_evals += evals
+                    b.eval_seconds += secs
         return merged
 
     def _stripe(self) -> _HitStripe:
@@ -268,7 +323,8 @@ class AdsalaRuntime:
         name = backend or getattr(sub, "backend", None) or DEFAULT_BACKEND
         # compile the fast path up front (None for stubs/uncompilable subs:
         # select() then falls back to the artifact's reference path)
-        compiled = compile_predictor(sub, prune=self._fast_prune)
+        compiled = compile_predictor(sub, prune=self._fast_prune,
+                                     coreset=self._fast_knn_coreset)
         with self._lock:
             self._subs[(name, sub.op, sub.dtype_bytes)] = sub
             self._fast[(name, sub.op, sub.dtype_bytes)] = compiled
@@ -285,6 +341,16 @@ class AdsalaRuntime:
                   backend: str = DEFAULT_BACKEND):
         """The compiled fast-path predictor, or None if uncompilable."""
         return self._fast_get((backend, op, dtype_bytes))
+
+    def peek(self, op: str, dims: tuple[int, ...], dtype_bytes: int = 4,
+             backend: str = DEFAULT_BACKEND) -> Knob | None:
+        """Lock-free cache probe: the cached knob, or None on a miss.
+        Records no statistics and no LRU recency — callers that act on the
+        result should go through :meth:`select` (the trace-time batcher
+        uses this to route only true misses into a combining window)."""
+        if type(dims) is not tuple:
+            dims = tuple(dims)
+        return self._cache_get((backend, op, dtype_bytes, dims))
 
     def backends(self) -> tuple[str, ...]:
         """Backend names with at least one registered subroutine."""
@@ -317,41 +383,75 @@ class AdsalaRuntime:
             return knob
         return self._select_miss(key)
 
+    def _shard(self, bk_op: tuple[str, str]) -> _Shard:
+        shard = self._shards_get(bk_op)
+        if shard is None:
+            with self._lock:
+                shard = self._shards.setdefault(bk_op, _Shard())
+        return shard
+
     def _select_miss(self, key: tuple) -> Knob:
         backend, op, dtype_bytes, dims = key
         sub_key = (backend, op, dtype_bytes)
-        sub = self._subs_get(sub_key)
-        if sub is None:
+        if self._subs_get(sub_key) is None:
             raise KeyError(sub_key)
+        shard = self._shard((backend, op))
+        with shard.lock:
+            ent = shard.inflight.get(key)
+            leader = ent is None
+            if leader:
+                ent = shard.inflight[key] = _Inflight()
+        if not leader:
+            # same-key coalescing: ride the evaluation already in flight
+            # (a knob served from someone else's paid-for computation is a
+            # hit for accounting purposes)
+            if ent.event.wait(timeout=60.0) and ent.knob is not None:
+                self._record_hit(backend, key)
+                return ent.knob
+            return self._evaluate_and_store(key, sub_key, shard)
+        try:
+            # re-probe after winning leadership: a thread descheduled
+            # between the lock-free cache check and here may find the key
+            # already stored by a previous leader — serving the cached
+            # knob keeps "one eval per key" exact instead of best-effort
+            knob = self._cache_get(key)
+            if knob is not None:
+                ent.knob = knob
+                self._record_hit(backend, key)
+                return knob
+            knob = ent.knob = self._evaluate_and_store(key, sub_key, shard)
+            return knob
+        finally:
+            ent.event.set()
+            with shard.lock:
+                shard.inflight.pop(key, None)
+
+    def _evaluate_and_store(self, key: tuple, sub_key: tuple,
+                            shard: _Shard) -> Knob:
+        # model evaluation runs with NO lock held (pure numpy,
+        # deterministic) so concurrent distinct-shape selections never
+        # serialise; eval statistics live on the (backend, op) shard
+        sub = self._subs_get(sub_key)
         fast = self._fast_get(sub_key)
-        # model evaluation runs unlocked (pure numpy, deterministic) so
-        # concurrent distinct-shape selections don't serialise; a racing
-        # duplicate computes the same knob and the second store is a no-op
         t0 = time.perf_counter()
-        knob = fast.select(dims) if fast is not None else sub.select(dims)
-        dt = time.perf_counter() - t0
+        knob = fast.select(key[3]) if fast is not None else sub.select(key[3])
+        shard.count_eval(time.perf_counter() - t0)
         with self._lock:
-            self._count_eval_locked(backend, dt)
             self._store_locked(key, knob)
         return knob
 
-    def _count_eval_locked(self, backend: str, dt: float) -> None:
-        base = self._base
-        base.calls += 1
-        base.model_evals += 1
-        base.eval_seconds += dt
-        b = base.for_backend(backend)
-        b.calls += 1
-        b.model_evals += 1
-        b.eval_seconds += dt
-
     def _store_locked(self, key: tuple, knob: Knob) -> None:
-        self._fold_touches_locked()      # honour hit recency before evicting
-        self._cache[key] = knob
-        self._cache.move_to_end(key)
+        cache = self._cache
+        if len(cache) >= self._cache_size and key not in cache:
+            # an eviction is due: honour pending hit recency first.  (The
+            # fold used to run on every miss; eviction time is the only
+            # point the relaxed LRU order is actually consulted.)
+            self._fold_touches_locked()
+        cache[key] = knob
+        cache.move_to_end(key)
         self._cache_mirror[key] = knob
-        while len(self._cache) > self._cache_size:
-            old, _ = self._cache.popitem(last=False)
+        while len(cache) > self._cache_size:
+            old, _ = cache.popitem(last=False)
             self._cache_mirror.pop(old, None)
 
     def select_or_default(self, op: str, dims: tuple[int, ...],
@@ -413,7 +513,7 @@ class AdsalaRuntime:
         by_sub: dict[tuple, list[tuple]] = {}
         for key in misses:
             by_sub.setdefault(key[:3], []).append(key)
-        resolved: dict[tuple, tuple[Knob, float]] = {}
+        resolved: dict[tuple, Knob] = {}
         for sub_key, keys in by_sub.items():
             sub = self._subs_get(sub_key)
             if sub is None:
@@ -424,19 +524,20 @@ class AdsalaRuntime:
                 knobs = fast.select_many([k[3] for k in keys])
             else:
                 knobs = [sub.select(k[3]) for k in keys]
-            dt = (time.perf_counter() - t0) / len(keys)
+            # eval statistics live on the (backend, op) shard, like the
+            # one-at-a-time miss path
+            self._shard(sub_key[:2]).count_eval(
+                time.perf_counter() - t0, n=len(keys))
             for key, knob in zip(keys, knobs):
-                resolved[key] = (knob, dt)
+                resolved[key] = knob
         if resolved:
             with self._lock:
-                for key, (knob, dt) in resolved.items():
-                    self._count_eval_locked(key[0], dt)
+                for key, knob in resolved.items():
                     self._store_locked(key, knob)
         for key, slots in misses.items():
-            hit = resolved.get(key)
-            if hit is None:
+            knob = resolved.get(key)
+            if knob is None:
                 continue            # unregistered subroutine: leave None
-            knob = hit[0]
             for i in slots:
                 out[i] = knob
             if record_hits and len(slots) > 1:   # duplicate keys = hits

@@ -21,12 +21,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import types
 from typing import Sequence
 
 import numpy as np
 
 from .dataset import TimingDataset
-from .fastpath import CompiledPredictor
+from .fastpath import CompiledPredictor, compile_predictor
 from .ml import make_model, tune_model, rmse
 from .preprocess import PreprocessPipeline
 
@@ -137,11 +138,12 @@ def evaluate_candidates(
                            n_trials=tune_trials, seed=seed)
         fit_s = time.perf_counter() - t0
         test_rmse = rmse(yte, model.predict(Z_test))
-        try:
-            compiled = CompiledPredictor(ds.op, ds.knob_space, pipeline,
-                                         model, log_target)
-        except Exception:        # noqa: BLE001 — uncompilable: the runtime
-            compiled = None      # would serve the reference path instead
+        # the exact artifact-compilation entry point the runtime uses, so
+        # t_eval is charged at the lowering each family actually serves
+        # (returns None for uncompilable combinations)
+        compiled = compile_predictor(types.SimpleNamespace(
+            op=ds.op, knob_space=ds.knob_space, pipeline=pipeline,
+            model=model, log_target=log_target))
         if compiled is not None:
             t_eval_us = _measure_eval_time_us(compiled, d0)
         else:

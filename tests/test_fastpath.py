@@ -113,6 +113,177 @@ def test_parity_persisted_artifacts():
                 (sub.backend, sub.op, dims)
 
 
+# ---------------------------------------------------------------------------
+# v2 lowerings: predicated single trees, screened exact KNN
+# ---------------------------------------------------------------------------
+
+V2_FAMILIES = ("KNN", "DistilledTree")
+
+
+@pytest.fixture(scope="module")
+def installed_v2():
+    """KNN artifacts for every op plus distilled trees for two ops (the
+    lowerings PR 4 added), fit on the same structured synthetic timer."""
+    out = {}
+    for op in OPS:
+        space = ops.knob_space_for(op, sizes=(32, 64))
+        out[(op, "KNN")] = install_subroutine(
+            op, space, _timer(space), n_samples=10, dim_lo=16, dim_hi=256,
+            max_footprint_bytes=10_000_000, candidates=("KNN",),
+            tune_trials=1, use_lof=False, backend="cpu_blocked")
+    for op in ("gemm", "symm"):
+        space = ops.knob_space_for(op, sizes=(32, 64))
+        out[(op, "DistilledTree")] = install_subroutine(
+            op, space, _timer(space), n_samples=10, dim_lo=16, dim_hi=256,
+            max_footprint_bytes=10_000_000, candidates=("DistilledTree",),
+            tune_trials=1, use_lof=False, backend="cpu_blocked")
+    return out
+
+
+@pytest.mark.parametrize("op", OPS)
+def test_parity_knn(installed_v2, op):
+    """The screened exact KNN lookup is bit-identical to the reference
+    brute-force path on every op's feature space."""
+    sub = installed_v2[(op, "KNN")]
+    cp = compile_predictor(sub)
+    assert cp is not None and cp.lowering == "screened-knn"
+    for dims in _dims_sweep(op):
+        assert np.array_equal(cp.predict_times(dims),
+                              sub.predict_times(dims)), (op, dims)
+        assert cp.select(dims) == sub.select(dims)
+
+
+@pytest.mark.parametrize("op", ("gemm", "symm"))
+def test_parity_distilled_tree(installed_v2, op):
+    sub = installed_v2[(op, "DistilledTree")]
+    cp = compile_predictor(sub)
+    assert cp is not None and cp.lowering == "predicated-tree"
+    for dims in _dims_sweep(op):
+        assert np.array_equal(cp.predict_times(dims),
+                              sub.predict_times(dims)), (op, dims)
+
+
+def test_parity_knn_distance_weights(installed_v2):
+    """Distance-weighted KNN: the weighted combine over canonical
+    neighbours reproduces the reference bit for bit."""
+    from repro.core.ml.knn import KNN
+    sub = installed_v2[("gemm", "KNN")]
+    m = sub.model
+    import dataclasses
+    sub2 = dataclasses.replace(
+        sub, model=KNN(k=m.k, weights="distance").fit(m.X_, m.y_),
+        dataset=None, reports=[])
+    cp = compile_predictor(sub2)
+    for dims in _dims_sweep("gemm", n_random=8):
+        assert np.array_equal(cp.predict_times(dims),
+                              sub2.predict_times(dims)), dims
+
+
+def test_parity_batch_v2(installed_v2):
+    """Batched prediction (with its duplicate-row fold) stays bit-identical
+    to per-dims prediction for the new lowerings."""
+    rng = np.random.default_rng(5)
+    for key in ((("gemm", "KNN")), ("gemm", "DistilledTree")):
+        sub = installed_v2[key]
+        cp = compile_predictor(sub)
+        dims_list = [tuple(int(v) for v in rng.integers(8, 2048, size=3))
+                     for _ in range(7)]
+        dims_list.append(dims_list[0])          # duplicate item
+        t = cp.predict_times_batch(dims_list)
+        for b, dims in enumerate(dims_list):
+            assert np.array_equal(t[b], sub.predict_times(dims)), (key, dims)
+
+
+def test_lowering_names(installed, installed_v2):
+    assert compile_predictor(
+        installed[("gemm", 4, "LinearRegression")]).lowering \
+        == "reference-predict"
+    assert compile_predictor(
+        installed[("gemm", 4, "DecisionTree")]).lowering == "predicated-tree"
+    assert compile_predictor(
+        installed_v2[("gemm", "KNN")]).lowering == "screened-knn"
+    assert compile_predictor(
+        installed_v2[("gemm", "DistilledTree")]).lowering \
+        == "predicated-tree"
+
+
+def test_screened_knn_screen_path_parity():
+    """The sgemm screen + certification + exact rescore, driven directly
+    at n >> 4k so the brute-force early exit can NOT mask it: parity with
+    the canonical reference on clustered data, duplicate training points
+    (exact distance ties), and queries placed exactly on tie boundaries
+    (exercising the union fallback)."""
+    from repro.core.fastpath import _ScreenedKNN
+    from repro.core.ml.knn import KNN
+    rng = np.random.default_rng(17)
+    n, C = 600, 7
+    X = rng.normal(size=(n, C)) * rng.uniform(0.5, 3.0, size=C)
+    X[100:140] = X[60:100]          # duplicate blocks: exact tie clusters
+    X[500:530] = X[0]               # one point duplicated 30x > PAD
+    y = rng.normal(size=n)
+    for k, weights in ((5, "uniform"), (15, "distance"), (3, "distance")):
+        m = KNN(k=k, weights=weights).fit(X, y)
+        sk = _ScreenedKNN(m)
+        Q = np.vstack([
+            X[rng.integers(0, n, size=6)] + rng.normal(scale=1e-3,
+                                                       size=(6, C)),
+            X[[0, 60, 100, 500]],   # exactly ON the tie clusters
+            rng.normal(size=(4, C)) * 5.0,        # far queries
+        ])
+        assert np.array_equal(sk.predict(Q), m.predict(Q)), (k, weights)
+
+
+def test_screened_knn_nonfinite_queries_fall_back():
+    from repro.core.fastpath import _ScreenedKNN
+    from repro.core.ml.knn import KNN
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(300, 5))
+    m = KNN(k=5).fit(X, rng.normal(size=300))
+    sk = _ScreenedKNN(m)
+    Q = rng.normal(size=(4, 5))
+    Q[2, 3] = np.inf                # feature overflow: exact full rescore
+    assert np.array_equal(sk.predict(Q), m.predict(Q))
+
+
+def test_threshold_fold_saturating_lambda_at_inf(installed):
+    """Negative-lambda YJ columns saturate at a finite limit as x -> inf;
+    the folded thresholds must route an infinite raw feature exactly like
+    the reference transform would."""
+    from repro.core.fastpath import _invert_monotone_thresholds
+    lam = np.array([-0.5, -0.5, 0.8])
+    mean = np.array([0.0, 10.0, 0.0])
+    scale = np.array([1.0, 1.0, 1.0])
+
+    def tfun(x):
+        return ((np.power(x + 1.0, lam) - 1.0) / lam - mean) / scale
+
+    # node 0: thr below the saturation limit (= (0-1)/-0.5 = 2.0) -> some
+    # finite inversion; node 1: thr ABOVE the shifted saturation limit ->
+    # +inf (an infinite x still satisfies tfun(x) <= thr); node 2:
+    # diverging lambda -> finite inversion
+    thr = np.array([1.0, 0.0, 5.0])
+    raw = _invert_monotone_thresholds(tfun, thr, saturates=lam < 0)
+    assert np.isfinite(raw[0]) and raw[1] == np.inf and np.isfinite(raw[2])
+    for x in (0.0, 1.0, 1e300, np.finfo(np.float64).max, np.inf):
+        want = tfun(np.full(3, x)) <= thr
+        got = np.full(3, x) <= raw
+        assert np.array_equal(want, got), x
+
+
+def test_predicated_tree_layout_fallback(installed):
+    """Row counts beyond the slot budget fall back to the generic stacked
+    descent — still bit-identical."""
+    from repro.core.fastpath import _PredicatedTree
+    sub = installed[("gemm", 4, "DecisionTree")]
+    tree = sub.model.tree_
+    pt = _PredicatedTree(tree)
+    pt.CAP = 1                    # force the fallback for every row count
+    rng = np.random.default_rng(9)
+    ncols = int(tree.feature.max()) + 1
+    Z = np.asfortranarray(rng.normal(size=(13, max(ncols, 1))))
+    assert np.array_equal(pt.predict(Z), tree.predict(Z))
+
+
 def test_parity_thread_knob_space(installed):
     """Thread-count spaces are detected as dims-independent (nt computed
     once at compile time) and still match the reference bit-for-bit."""
@@ -192,6 +363,104 @@ def test_dominated_prune_semantics(installed):
 
 
 # ---------------------------------------------------------------------------
+# confidence-band prune (opt-in) + KNN coreset (opt-in)
+# ---------------------------------------------------------------------------
+
+def test_band_analysis_persisted_roundtrip(installed, tmp_path):
+    sub = installed[("gemm", 4, "LinearRegression")]
+    assert sub.fast_band_idx is not None
+    assert sub.fast_band_pct == 10.0
+    # the band set contains every argmin winner (winners are within 0%)
+    assert set(sub.fast_live_idx).issubset(set(sub.fast_band_idx))
+    reg = ModelRegistry(tmp_path)
+    reg.save(sub)
+    back = reg.load_all()[0]
+    assert np.array_equal(back.fast_band_idx, sub.fast_band_idx)
+    assert back.fast_band_pct == sub.fast_band_pct
+
+
+def test_band_prune_semantics(installed):
+    sub = installed[("gemm", 4, "LinearRegression")]
+    cp = compile_predictor(sub, prune="band")
+    full = compile_predictor(sub)
+    band = set(int(i) for i in sub.fast_band_idx)
+    lo, hi = sub.fast_dims_lo, sub.fast_dims_hi
+    if len(band) < len(sub.knob_space):
+        assert cp._live is not None
+        mid = tuple(int((a + b) // 2) for a, b in zip(lo, hi))
+        idx = cp.select_index(mid)
+        assert idx in band
+        t = full.predict_times(mid)
+        band_sorted = sorted(band)
+        assert idx == band_sorted[int(np.argmin(t[band_sorted]))]
+    # out-of-range dims: full-K evaluation, exact parity with the reference
+    far = tuple(int(h * 2 + 1) for h in hi)
+    assert cp.select(far) == sub.select(far)
+    assert np.array_equal(cp.predict_times(far), sub.predict_times(far))
+
+
+def test_band_is_superset_of_argmin_live(installed):
+    """band prune keeps near-winners the argmin-only prune would drop."""
+    for key, sub in installed.items():
+        if sub.fast_band_idx is None or sub.fast_live_idx is None:
+            continue
+        assert set(sub.fast_live_idx).issubset(set(sub.fast_band_idx)), key
+
+
+def test_knn_coreset_optin(installed_v2, tmp_path):
+    from repro.core import attach_knn_coreset
+    from repro.core.ml.knn import KNN
+    sub = installed_v2[("gemm", "KNN")]
+    assert sub.fast_knn_coreset is None       # never attached by default
+    assert attach_knn_coreset(sub, frac=0.5, min_size=8)
+    idx = sub.fast_knn_coreset
+    assert idx is not None and 0 < idx.size <= sub.model.X_.shape[0]
+    # persists and round-trips
+    reg = ModelRegistry(tmp_path)
+    reg.save(sub)
+    back = reg.load_all()[0]
+    assert np.array_equal(back.fast_knn_coreset, idx)
+    # DEFAULT compile ignores the coreset: exact parity with the full model
+    cp = compile_predictor(back)
+    assert cp.lowering == "screened-knn" and not cp.coreset
+    for dims in _dims_sweep("gemm", n_random=6):
+        assert np.array_equal(cp.predict_times(dims),
+                              sub.predict_times(dims))
+    # opt-in compile == a KNN fit on the subsample (inexact vs full model)
+    cpc = compile_predictor(back, coreset=True)
+    assert cpc.lowering == "screened-knn-coreset" and cpc.coreset
+    m = sub.model
+    msub = KNN(k=m.k, weights=m.weights).fit(m.X_[idx], m.y_[idx])
+    import dataclasses
+    want = dataclasses.replace(sub, model=msub, dataset=None, reports=[],
+                               fast_knn_coreset=None)
+    for dims in _dims_sweep("gemm", n_random=6):
+        assert np.array_equal(cpc.predict_times(dims),
+                              want.predict_times(dims))
+
+
+def test_runtime_coreset_flag(installed_v2):
+    from repro.core import attach_knn_coreset
+    sub = installed_v2[("trsm", "KNN")]
+    if sub.fast_knn_coreset is None:
+        attach_knn_coreset(sub, frac=0.5, min_size=8)
+    rt = AdsalaRuntime(fast_knn_coreset=True)
+    rt.register(sub)
+    cp = rt.predictor("trsm", 4, backend="cpu_blocked")
+    assert cp is not None and cp.coreset
+    rt_plain = AdsalaRuntime()
+    rt_plain.register(sub)
+    assert not rt_plain.predictor("trsm", 4, backend="cpu_blocked").coreset
+
+
+def test_attach_knn_coreset_non_knn(installed):
+    from repro.core import attach_knn_coreset
+    sub = installed[("gemm", 4, "LinearRegression")]
+    assert not attach_knn_coreset(sub)
+    assert sub.fast_knn_coreset is None
+
+
+# ---------------------------------------------------------------------------
 # lock-free hit path under concurrency: stats stay exact
 # ---------------------------------------------------------------------------
 
@@ -240,6 +509,120 @@ def test_lockfree_hits_stats_exact_under_stress():
         assert getattr(s, counter) == sum(getattr(b, counter) for b in per)
     # all stress selects after prefill were hits or defaults (no re-evals)
     assert s.model_evals == prefill.model_evals
+
+
+# ---------------------------------------------------------------------------
+# sharded miss path: same-key coalescing, per-(backend, op) locks
+# ---------------------------------------------------------------------------
+
+class SlowStubSub(StubSub):
+    """Uncompilable sub whose reference select is slow enough that
+    concurrent misses on one key overlap."""
+
+    def select(self, dims):
+        import time as _t
+        _t.sleep(0.05)
+        return super().select(dims)
+
+
+def test_miss_coalescing_single_eval():
+    """N concurrent misses on ONE key -> exactly one model evaluation; the
+    other callers count as hits (they rode the in-flight computation)."""
+    rt = AdsalaRuntime()
+    stub = SlowStubSub("b0")
+    rt.register(stub)
+    n_threads = 6
+    knobs, errors = [], []
+
+    def worker():
+        try:
+            knobs.append(rt.select("gemm", (64, 64, 64), 4, backend="b0"))
+        except Exception as e:        # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert stub.evals == 1
+    assert all(k == stub.knob for k in knobs)
+    s = rt.stats
+    assert s.model_evals == 1
+    assert s.cache_hits == n_threads - 1
+    assert s.calls == s.cache_hits + s.model_evals + s.default_calls
+
+
+def test_miss_shards_are_per_backend_op():
+    rt = AdsalaRuntime()
+    for name in ("b0", "b1"):
+        rt.register(StubSub(name))
+        rt.register(StubSub(name, op="symm"))
+    rt.select("gemm", (32, 32, 32), 4, backend="b0")
+    rt.select("gemm", (32, 32, 32), 4, backend="b1")
+    rt.select("symm", (32, 32), 4, backend="b0")
+    shards = rt._shards
+    assert ("b0", "gemm") in shards and ("b1", "gemm") in shards \
+        and ("b0", "symm") in shards
+    assert shards[("b0", "gemm")] is not shards[("b1", "gemm")]
+    # eval statistics live on the shards and aggregate exactly
+    s = rt.stats
+    assert s.model_evals == 3
+    assert s.for_backend("b0").model_evals == 2
+    assert s.for_backend("b1").model_evals == 1
+
+
+# ---------------------------------------------------------------------------
+# trace-time decision batching (ops._select hook)
+# ---------------------------------------------------------------------------
+
+def test_trace_batching_batches_concurrent_misses(installed):
+    sub = installed[("gemm", 4, "LinearRegression")]
+    rt = AdsalaRuntime()
+    rt.register(sub, backend="pallas")
+    shapes = [(32 * i, 64, 32 * j) for i in range(1, 5) for j in range(1, 5)]
+    errors = []
+    with ops.trace_batching(linger_ms=1.0) as batcher:
+        def worker(tid):
+            rng = np.random.default_rng(tid)
+            try:
+                for _ in range(30):
+                    d = shapes[int(rng.integers(len(shapes)))]
+                    got = ops._select("gemm", d, np.float32, None, rt)
+                    assert got == sub.select(d), d
+            except Exception as e:        # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(t,))
+                   for t in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert not errors
+    # the per-thread rngs are seeded, so the requested key set is exact
+    drawn = set()
+    for t in range(4):
+        rng = np.random.default_rng(t)
+        for _ in range(30):
+            drawn.add(shapes[int(rng.integers(len(shapes)))])
+    # every distinct key evaluated exactly once, through select_many
+    s = rt.stats
+    assert s.model_evals == len(drawn)
+    assert batcher.batches >= 1
+    assert batcher.batched_keys >= 1
+    assert s.calls == s.cache_hits + s.model_evals + s.default_calls
+    # the hook uninstalls on context exit
+    assert ops._TRACE_BATCHER is None
+
+
+def test_trace_batching_untuned_falls_back_to_default():
+    rt = AdsalaRuntime()
+    with ops.trace_batching(linger_ms=0.1):
+        knob = ops._select("gemm", (64, 64, 64), np.float32, None, rt)
+    assert knob == ops.default_knob("gemm")
+    assert rt.stats.default_calls == 1
 
 
 # ---------------------------------------------------------------------------
