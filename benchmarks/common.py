@@ -81,3 +81,17 @@ def measure_speedup(op: str, prec: str, rt: AdsalaRuntime, dims: tuple,
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.2f},{derived}"
+
+
+def record_trajectory_entry(path: Path, bench_name: str, entry_id: str,
+                            payload: dict) -> None:
+    """Append/replace a per-PR entry in a committed trajectory file
+    (``{"bench": ..., "entries": {id: payload}}``, entries in insertion
+    order, newest last — the shape ``scripts/bench_diff.py`` gates on)."""
+    import json
+    data = {"bench": bench_name, "entries": {}}
+    if path.exists():
+        data = json.loads(path.read_text())
+    data.setdefault("entries", {}).pop(entry_id, None)
+    data["entries"][entry_id] = payload
+    path.write_text(json.dumps(data, indent=1) + "\n")

@@ -29,6 +29,8 @@ runtime and asserts it performed ZERO model evaluations.
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import tempfile
 import threading
@@ -250,6 +252,17 @@ def warm_start_check(args) -> bool:
         return ok
 
 
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_serving.json"
+
+
+def record_entry(entry_id: str, payload: dict, path: Path = BENCH_PATH):
+    """Append/replace the per-PR entry in the committed serving trajectory
+    (same shape as BENCH_decision.json)."""
+    from common import record_trajectory_entry    # script-mode only module
+    record_trajectory_entry(path, "serving", entry_id, payload)
+    print(f"[serve_bench] recorded entry {entry_id!r} -> {path}")
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--op", default="gemm", choices=(
@@ -291,6 +304,12 @@ def main(argv=None) -> int:
                    help="also run the decision-cache warm-start check")
     p.add_argument("--min-speedup", type=float, default=None,
                    help="exit nonzero unless batched/unbatched >= this")
+    p.add_argument("--json", type=Path, default=None,
+                   help="write the run's summary metrics to this file "
+                        "(consumed by scripts/bench_diff.py --serving-fresh)")
+    p.add_argument("--record", default=None, metavar="ENTRY",
+                   help="append/replace this per-PR entry (e.g. pr5) in the "
+                        "committed BENCH_serving.json trajectory")
     args = p.parse_args(argv)
     low_core = (os.cpu_count() or 1) < args.low_core_threshold
     if args.workers is None:
@@ -323,6 +342,35 @@ def main(argv=None) -> int:
     print(f"[serve_bench] batched/unbatched throughput: {speedup:.2f}x "
           f"(mean batch {ba['mean_batch']:.1f}, "
           f"median of {max(1, args.repeats)})")
+
+    summary = {
+        "batched_speedup": round(speedup, 3),
+        "mean_batch": round(ba["mean_batch"], 2),
+        "batched_rps": round(ba["throughput_rps"], 1),
+        "unbatched_rps": round(un["throughput_rps"], 1),
+        "batched_p99_ms": round(ba["p99_ms"], 3),
+        "unbatched_p99_ms": round(un["p99_ms"], 3),
+        "cpus": os.cpu_count(),
+        "low_core": low_core,
+    }
+    if args.json is not None:
+        args.json.write_text(json.dumps({"summary": summary}, indent=1))
+        print(f"[serve_bench] summary metrics -> {args.json}")
+    if args.record is not None:
+        record_entry(args.record, {
+            "host": {"platform": platform.platform(),
+                     "python": platform.python_version(),
+                     "cpus": os.cpu_count()},
+            "config": {"op": args.op, "backend": args.backend,
+                       "requests": args.requests, "shapes": args.shapes,
+                       "zipf_a": args.zipf_a, "max_batch": args.max_batch,
+                       "linger_ms": args.linger_ms, "workers": args.workers,
+                       "repeats": args.repeats},
+            "unbatched": un, "batched": ba,
+            # the dimensionless ratios bench_diff gates (both sides of each
+            # ratio measured in the same run on the same host)
+            "smoke_baseline": summary,
+        })
 
     ok = True
     if args.warm_start:

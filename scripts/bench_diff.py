@@ -1,23 +1,31 @@
 #!/usr/bin/env python
-"""CI gate for the decision-path perf trajectory.
+"""CI gate for the committed perf trajectories.
 
-Runs the decision bench's smoke configuration fresh and diffs its
-dimensionless metrics against the ``smoke_baseline`` of the newest entry in
-the committed ``BENCH_decision.json``.  Only speedup *ratios* are compared —
-both sides of every ratio are measured on the same host in the same run, so
-the gate is meaningful on CI hardware that has nothing in common with the
-box that produced the committed numbers.
+Diffs freshly measured dimensionless metrics against the ``smoke_baseline``
+of the newest entry in each committed trajectory file.  Only speedup
+*ratios* (or exact structural counts) are compared — both sides of every
+ratio are measured on the same host in the same run, so the gate is
+meaningful on CI hardware that has nothing in common with the box that
+produced the committed numbers.
 
-Fails (exit 1) when any gated metric regresses by more than ``--tolerance``
-(default 25%):
+Three trajectories:
 
-  * per-family cold-eval speedup (compiled fast path vs reference path),
-  * the cached per-call path speedup (select_or_default vs the frozen PR-2
-    runtime),
-  * the batched-selection speedup (select_many vs N selects).
+  * ``BENCH_decision.json`` (always gated): per-family cold-eval speedup,
+    the cached per-call path speedup (wide gate + absolute floor), and the
+    batched-selection speedup.  Fails on a >``--tolerance`` regression.
+  * ``BENCH_serving.json`` (gated when ``--serving-fresh`` is given): the
+    batched/unbatched throughput ratio.  On hosts with fewer than 3 cores
+    the gate is demoted to a warning — the ratio is GIL-scheduling-flaky
+    there (same low-core guard as serve_bench itself).
+  * ``BENCH_kernels.json`` (gated when ``--kernels-fresh`` is given): the
+    zero-copy execution contract — structural, deterministic metrics
+    (host-side pad/slice op counts must be exactly zero; the tri_packed
+    grid-slot saving must not shrink), so this gate is immune to timing
+    jitter.
 
     PYTHONPATH=src python scripts/bench_diff.py
-    PYTHONPATH=src python scripts/bench_diff.py --fresh /tmp/smoke.json
+    PYTHONPATH=src python scripts/bench_diff.py --fresh /tmp/smoke.json \
+        --serving-fresh /tmp/serving.json --kernels-fresh /tmp/kernels.json
 """
 
 from __future__ import annotations
@@ -32,6 +40,8 @@ sys.path.insert(0, str(REPO_ROOT / "src"))
 sys.path.insert(0, str(REPO_ROOT / "benchmarks"))
 
 BENCH_PATH = REPO_ROOT / "BENCH_decision.json"
+SERVING_PATH = REPO_ROOT / "BENCH_serving.json"
+KERNELS_PATH = REPO_ROOT / "BENCH_kernels.json"
 
 #: summary-level ratios under the standard (--tolerance) gate
 GATED_SUMMARY = ("cold_median_speedup", "batch_speedup")
@@ -46,6 +56,12 @@ HIT_TOLERANCE = 0.75
 HIT_FLOOR = 3.0
 
 
+#: how to (re)generate each trajectory's committed baseline
+_RECORDERS = {"decision": "benchmarks/decision_bench.py (full mode)",
+              "serving": "benchmarks/serve_bench.py --record <entry>",
+              "kernels": "benchmarks/kernel_bench.py --record <entry>"}
+
+
 def committed_baseline(path: Path) -> tuple[str, dict]:
     """(entry id, smoke_baseline) of the newest committed entry that has
     one (entries preserve insertion order; the migrated pr3 entry predates
@@ -56,8 +72,10 @@ def committed_baseline(path: Path) -> tuple[str, dict]:
         base = entries[entry_id].get("smoke_baseline")
         if base is not None:
             return entry_id, base
+    hint = _RECORDERS.get(payload.get("bench"),
+                          "the matching benchmark's --record mode")
     raise SystemExit(f"{path}: no entry carries a smoke_baseline — run "
-                     "benchmarks/decision_bench.py (full mode) first")
+                     f"{hint} first")
 
 
 def fresh_metrics(fresh_json: Path | None) -> dict:
@@ -76,14 +94,79 @@ def fresh_metrics(fresh_json: Path | None) -> dict:
             "cold_speedups": {f: r["speedup"] for f, r in cold.items()}}
 
 
+def gate_serving(fresh_json: Path, bench: Path, tolerance: float,
+                 failures: list) -> None:
+    """Batched/unbatched throughput ratio vs the committed trajectory;
+    warn-only on low-core hosts (serve_bench's own guard, recorded in the
+    fresh summary so the two guards cannot drift; cpu-count fallback for
+    summaries predating the flag)."""
+    import os
+    entry_id, base = committed_baseline(bench)
+    fresh = json.loads(fresh_json.read_text())["summary"]
+    committed = base.get("batched_speedup")
+    measured = fresh.get("batched_speedup")
+    if committed is None or measured is None:
+        return
+    low_core = fresh.get("low_core")
+    if low_core is None:
+        low_core = (os.cpu_count() or 1) < 3
+    bar = committed * (1.0 - tolerance)
+    ok = measured >= bar
+    mark = "ok " if ok else ("WRN" if low_core else "REG")
+    print(f"[bench_diff] {mark} serving.batched_speedup: committed "
+          f"{committed:.2f}x, fresh {measured:.2f}x (floor {bar:.2f}x)"
+          f"{' — low-core host, advisory only' if low_core and not ok else ''}")
+    if not ok and not low_core:
+        failures.append(f"serving.batched_speedup (vs {entry_id})")
+
+
+def gate_kernels(fresh_json: Path, bench: Path, tolerance: float,
+                 failures: list) -> None:
+    """Zero-copy structural contract: exact-zero host-side pad/slice counts
+    and non-shrinking packed-grid slot savings.  Deterministic — any drift
+    is a code change, not noise."""
+    entry_id, base = committed_baseline(bench)
+    data = json.loads(fresh_json.read_text())
+    fresh = data.get("smoke_baseline") or data["summary"]
+    copies = fresh.get("host_copy_ops", {})
+    for op, count in sorted(copies.items()):
+        ok = count == 0
+        print(f"[bench_diff] {'ok ' if ok else 'REG'} kernels.copy_ops.{op}: "
+              f"{count} (must be 0)")
+        if not ok:
+            failures.append(f"kernels.copy_ops.{op}")
+    for op, committed in sorted(base.get("packed_slot_ratio", {}).items()):
+        measured = fresh.get("packed_slot_ratio", {}).get(op)
+        if measured is None:
+            continue
+        bar = committed * (1.0 - tolerance)
+        ok = measured >= bar
+        print(f"[bench_diff] {'ok ' if ok else 'REG'} "
+              f"kernels.packed_slot_ratio.{op}: committed {committed:.2f}x, "
+              f"fresh {measured:.2f}x (floor {bar:.2f}x)")
+        if not ok:
+            failures.append(f"kernels.packed_slot_ratio.{op} "
+                            f"(vs {entry_id})")
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--bench", type=Path, default=BENCH_PATH,
-                   help="committed trajectory file")
+                   help="committed decision trajectory file")
     p.add_argument("--fresh", type=Path, default=None,
                    help="pre-generated smoke metrics JSON "
                         "(decision_bench --smoke --json PATH); default: "
                         "run the smoke suite now")
+    p.add_argument("--serving-fresh", type=Path, default=None,
+                   help="fresh serving metrics (serve_bench --json PATH); "
+                        "gates BENCH_serving.json when given")
+    p.add_argument("--serving-bench", type=Path, default=SERVING_PATH,
+                   help="committed serving trajectory file")
+    p.add_argument("--kernels-fresh", type=Path, default=None,
+                   help="fresh kernel metrics (kernel_bench --smoke --json "
+                        "PATH); gates BENCH_kernels.json when given")
+    p.add_argument("--kernels-bench", type=Path, default=KERNELS_PATH,
+                   help="committed kernel trajectory file")
     p.add_argument("--tolerance", type=float, default=0.25,
                    help="allowed fractional regression per metric")
     args = p.parse_args(argv)
@@ -114,6 +197,13 @@ def main(argv=None) -> int:
               metric_floor=max(HIT_FLOOR, hit * (1.0 - HIT_TOLERANCE)))
     for fam, committed in base.get("cold_speedups", {}).items():
         check(f"cold.{fam}", committed, fresh["cold_speedups"].get(fam))
+
+    if args.serving_fresh is not None:
+        gate_serving(args.serving_fresh, args.serving_bench,
+                     args.tolerance, failures)
+    if args.kernels_fresh is not None:
+        gate_kernels(args.kernels_fresh, args.kernels_bench,
+                     args.tolerance, failures)
 
     if failures:
         print(f"[bench_diff] FAILED vs entry {entry_id!r}: "

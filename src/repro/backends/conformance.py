@@ -21,12 +21,26 @@ import numpy as np
 
 from .registry import available_backends, get_backend
 
-__all__ = ["DEFAULT_DIMS", "TOLERANCES", "ConformanceResult",
+__all__ = ["DEFAULT_DIMS", "RAGGED_DIMS", "TOLERANCES", "ConformanceResult",
            "check_backend_op", "oracle", "run_conformance", "tolerance_for"]
 
 #: tiny, deliberately non-block-aligned dims (exercise the padding paths)
 DEFAULT_DIMS = {"gemm": (48, 32, 40), "symm": (48, 40), "syrk": (48, 32),
                 "syr2k": (48, 32), "trmm": (48, 40), "trsm": (48, 40)}
+
+#: ragged dims spanning a ragged *last* tile behind full tiles (129, 257),
+#: a degenerate single-row problem (1, ...), and an off-multiple square
+#: (300) — the edge-tile masks of the zero-copy kernels at their corners
+#: (DEFAULT_DIMS never exceeds one block, so the last-tile masking with
+#: full tiles before it was previously unexercised)
+RAGGED_DIMS = {
+    "gemm": ((129, 65, 257), (1, 300, 384), (300, 300, 300)),
+    "symm": ((129, 257), (1, 384), (300, 300)),
+    "syrk": ((129, 257), (1, 384), (300, 300)),
+    "syr2k": ((129, 257), (1, 384), (300, 300)),
+    "trmm": ((129, 257), (1, 384), (300, 300)),
+    "trsm": ((129, 257), (1, 384), (300, 300)),
+}
 
 #: max relative error vs the f64 numpy oracle, keyed by operand dtype bytes
 TOLERANCES = {4: 5e-4, 8: 1e-10}
@@ -130,18 +144,26 @@ def check_backend_op(backend: str, op: str, dtype=np.float32, *,
 
 
 def run_conformance(backends=None, ops=None, dtypes=(np.float32, np.float64),
-                    *, tol: float | None = None,
-                    stacked_width: int = 0) -> list[ConformanceResult]:
+                    *, tol: float | None = None, stacked_width: int = 0,
+                    ragged: bool = False) -> list[ConformanceResult]:
     """The full sweep: every backend × its ops × dtypes (+ optionally the
-    stacked path at ``stacked_width``); returns one result per cell."""
+    stacked path at ``stacked_width``); ``ragged`` additionally sweeps every
+    cell over :data:`RAGGED_DIMS` (non-block-multiple shapes, stacked and
+    unstacked).  Returns one result per cell."""
     names = tuple(backends) if backends else available_backends()
     results = []
     for name in names:
         be = get_backend(name)
         for op in (tuple(ops) if ops else be.ops()):
             for dtype in dtypes:
-                results.append(check_backend_op(name, op, dtype, tol=tol))
-                if stacked_width:
-                    results.append(check_backend_op(
-                        name, op, dtype, tol=tol, stacked=stacked_width))
+                dims_sweep = [None]
+                if ragged:
+                    dims_sweep += list(RAGGED_DIMS[op])
+                for dims in dims_sweep:
+                    results.append(check_backend_op(name, op, dtype,
+                                                    dims=dims, tol=tol))
+                    if stacked_width:
+                        results.append(check_backend_op(
+                            name, op, dtype, dims=dims, tol=tol,
+                            stacked=stacked_width))
     return results

@@ -58,12 +58,11 @@ class PallasBackend(Backend):
 
     def execute_stacked(self, op: str, operands: tuple,
                         knob: Knob | None = None, **kw):
-        import jax
         from repro.kernels.ops import PALLAS_OPS
         kw.setdefault("interpret", self.interpret)
-        fn = PALLAS_OPS[op]
-        # vmap lifts the 2-D kernel over the batch axis (pallas_call has a
-        # batching rule: the stack becomes one extra grid dimension); the
-        # knob decision runs once at trace time for the whole stack
-        return jax.vmap(lambda *xs: fn(*xs, knob=knob, **kw))(
-            *(jnp.asarray(x) for x in operands))
+        # the kernels take the leading batch axis natively — it becomes the
+        # leading (parallel) grid dimension of ONE pallas_call, replacing
+        # the old jax.vmap lift; the knob decision still runs once at trace
+        # time for the whole stack
+        return PALLAS_OPS[op](*(jnp.asarray(x) for x in operands),
+                              knob=knob, **kw)

@@ -288,6 +288,22 @@ class _ScreenedKNN:
         # drop with ~100x headroom
         self.Pt32 = np.ascontiguousarray(self.P.T.astype(np.float32))
         self.pn32 = np.einsum("ij,ij->i", self.Pt32.T, self.Pt32.T)
+        # persistent per-thread screen workspace (same pattern as the
+        # CompiledPredictor feature buffers): batched select_many flushes
+        # repeat the same query-row counts, so the float32 query copy and
+        # the (Q, n) sgemm output are reused instead of rebuilt per call
+        self._tls = threading.local()
+
+    def _screen_buffers(self, q: int, c: int) -> tuple:
+        """(Z32, d2a) preallocated for this thread at ``q`` query rows."""
+        bufs = getattr(self._tls, "bufs", None)
+        if bufs is None:
+            bufs = self._tls.bufs = {}
+        b = bufs.get(q)
+        if b is None:
+            b = bufs[q] = (np.empty((q, c), dtype=np.float32),
+                           np.empty((q, self.n), dtype=np.float32))
+        return b
 
     def _exact_d2(self, Z: np.ndarray, cols: np.ndarray) -> np.ndarray:
         # the reference's expression verbatim: broadcast subtract, square,
@@ -306,14 +322,15 @@ class _ScreenedKNN:
         # gathered candidate subset
         Z = np.ascontiguousarray(Z)
         zn = np.einsum("ij,ij->i", Z, Z)
-        Z32 = Z.astype(np.float32)
+        Z32, d2a = self._screen_buffers(Z.shape[0], Z.shape[1])
+        np.copyto(Z32, Z)                     # downcast == Z.astype(f32)
         if n <= 4 * kk or not np.isfinite(zn).all() \
                 or not np.isfinite(Z32).all():
             return self._rescore(Z, np.arange(n))
         # -- screen: norm expansion at BLAS speed ------------------------
         # (|z|^2 is constant per row, so it shifts every entry AND the
         # k-th threshold equally — leave it out of the screen matrix)
-        d2a = Z32 @ self.Pt32
+        np.matmul(Z32, self.Pt32, out=d2a)
         d2a *= np.float32(-2.0)
         d2a += self.pn32
         M = min(kk + self.PAD, n)
@@ -509,6 +526,18 @@ class CompiledPredictor:
             dicts = [c.dict for c in self.candidates]
             self._bm = np.array([c["bm"] for c in dicts], dtype=np.float64)
             self._bn = np.array([c["bn"] for c in dicts], dtype=np.float64)
+            # tri_packed launches the packed triangle: (cm+1)/2 live row
+            # blocks per column (see knobs._grid_parallelism) — all values
+            # are small exact integers in f64, so any evaluation order
+            # reproduces the reference bit-for-bit
+            self._packed = np.array(
+                [c.get("variant") == "tri_packed" for c in dicts],
+                dtype=bool)
+            # folded at compile time: spaces without tri_packed candidates
+            # (gemm, symm, trsm, every legacy artifact) skip the packed
+            # branch entirely — a runtime .any() costs real microseconds on
+            # the K~8 cold path
+            self._has_packed = bool(self._packed.any())
             self._nt_mode = "grid"
         else:
             try:
@@ -539,6 +568,8 @@ class CompiledPredictor:
                 if self._nt_mode == "grid":
                     self._bm_live = self._bm[live]
                     self._bn_live = self._bn[live]
+                    self._packed_live = self._packed[live]
+                    self._has_packed_live = bool(self._packed_live.any())
                 elif self._nt_mode == "const":
                     self._nt_const_live = self._nt_const[live]
 
@@ -620,11 +651,16 @@ class CompiledPredictor:
 
     # -- feature building -----------------------------------------------------
     def _nt_into(self, dims: tuple, out: np.ndarray, bm: np.ndarray,
-                 bn: np.ndarray) -> np.ndarray:
+                 bn: np.ndarray, packed: np.ndarray | None) -> np.ndarray:
         if self._nt_mode == "grid":
-            # == float(ceil(m/bm) * ceil(n/bn)) per candidate, vectorised
+            # == float(ceil(m/bm) * ceil(n/bn)) per candidate, vectorised;
+            # tri_packed rows carry the packed-triangle fraction (cm+1)/2
+            # (exact small integers in f64 — bit-equal to the reference
+            # regardless of evaluation order)
             np.divide(dims[0], bm, out=out)
             np.ceil(out, out=out)
+            if packed is not None:        # caller passes it only when set
+                out[packed] = (out[packed] + 1.0) * 0.5
             out *= np.ceil(dims[-1] / bn)
             return out
         return np.asarray(self.knob_space.parallelism_vec(dims),
@@ -659,12 +695,16 @@ class CompiledPredictor:
             rows = self.K
             bm = getattr(self, "_bm", None)
             bn = getattr(self, "_bn", None)
+            packed = self._packed if getattr(self, "_has_packed", False) \
+                else None
             nt_const = self._nt_const
             const_fold = getattr(self, "_const_fold", None)
         else:
             rows = int(rows_idx.size)
             bm = getattr(self, "_bm_live", None)
             bn = getattr(self, "_bn_live", None)
+            packed = self._packed_live \
+                if getattr(self, "_has_packed_live", False) else None
             nt_const = getattr(self, "_nt_const_live", None)
             const_fold = getattr(self, "_const_fold_live", None)
         inv = None
@@ -674,7 +714,7 @@ class CompiledPredictor:
                 nt, inv = const_fold
         else:
             _, _, ntb = self._buffers(rows)
-            nt = self._nt_into(dims, ntb, bm, bn)
+            nt = self._nt_into(dims, ntb, bm, bn, packed)
             if rows_idx is not None and self._nt_mode == "generic":
                 nt = nt[rows_idx]
             if self._dedup:
@@ -734,8 +774,10 @@ class CompiledPredictor:
         B = len(dims_list)
         dims_arr = np.asarray(dims_list, dtype=np.float64)
         if self._nt_mode == "grid":
-            nt = (np.ceil(dims_arr[:, :1] / self._bm) *
-                  np.ceil(dims_arr[:, -1:] / self._bn))
+            cm = np.ceil(dims_arr[:, :1] / self._bm)
+            if self._has_packed:
+                cm = np.where(self._packed, (cm + 1.0) * 0.5, cm)
+            nt = cm * np.ceil(dims_arr[:, -1:] / self._bn)
         elif self._nt_mode == "const":
             nt = np.broadcast_to(self._nt_const, (B, self.K))
         else:

@@ -93,13 +93,29 @@ def thread_knob_space(max_threads: int, *,
 
 
 def _grid_parallelism(knob: Knob, dims: tuple[int, ...]) -> float:
-    """Parallel Pallas grid cells = ceil(m/bm)*ceil(n/bn) — the nt analogue."""
+    """Parallel Pallas grid cells = ceil(m/bm)*ceil(n/bn) — the nt analogue.
+
+    The ``tri_packed`` variant launches only the lower-triangle blocks, so
+    its cell count carries the packed fraction: (cm+1)/2 live row blocks
+    per column on average instead of cm.  This is what makes the variant
+    *learnable* — it is the only knob-dependent feature channel, and
+    without the adjustment full/tri_packed candidates would produce
+    byte-identical Table-III rows the model provably cannot separate.
+    ('full' and 'tri' launch the same grid — tri's dead cells still occupy
+    slots — so those two deliberately share a feature row and tie.)
+    Legacy persisted spaces contain no tri_packed candidates, so their
+    features are bit-for-bit unchanged.
+    """
     d = knob.dict
     if len(dims) == 3:
         m, _, n = dims
     else:
         m, n = dims
-    return math.ceil(m / d["bm"]) * math.ceil(n / d["bn"])
+    cm = math.ceil(m / d["bm"])
+    cn = math.ceil(n / d["bn"])
+    if d.get("variant") == "tri_packed":
+        return (cm + 1) * cn / 2.0
+    return cm * cn
 
 
 def block_knob_space(

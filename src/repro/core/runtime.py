@@ -65,11 +65,14 @@ _TOUCH_FOLD_LIMIT = 1024
 class _Inflight:
     """One in-progress model evaluation: followers wait on ``event`` and
     read ``knob`` (None means the leader failed — fall back to a local
-    evaluation)."""
+    evaluation).  ``event`` may be shared: ``select_many`` backs all the
+    keys of one fused evaluation with a single Event (they resolve
+    together, and per-key Event allocation is measurable on the batched
+    path)."""
     __slots__ = ("event", "knob")
 
-    def __init__(self) -> None:
-        self.event = threading.Event()
+    def __init__(self, event: threading.Event | None = None) -> None:
+        self.event = event if event is not None else threading.Event()
         self.knob: Knob | None = None
 
 
@@ -510,30 +513,92 @@ class AdsalaRuntime:
         if not misses:
             return out
 
-        by_sub: dict[tuple, list[tuple]] = {}
+        # missing keys join the same per-shard in-flight protocol as the
+        # one-at-a-time miss path, so a select_many racing a concurrent
+        # select (or another select_many) on the same key still costs ONE
+        # model evaluation total — the serving prewarm races the workers'
+        # own selections by design, and without this the loser of the race
+        # double-counted (and double-paid) the evaluation
+        shard_groups: dict = {}               # shard -> [keys]
         for key in misses:
-            by_sub.setdefault(key[:3], []).append(key)
+            if self._subs_get(key[:3]) is None:
+                continue                      # unregistered: stays None
+            shard_groups.setdefault(self._shard(key[:2]), []).append(key)
+        by_sub: dict[tuple, list[tuple]] = {}
+        owned: dict[tuple, tuple] = {}        # key -> (_Inflight, shard)
+        followers: dict[tuple, object] = {}   # key -> someone else's entry
         resolved: dict[tuple, Knob] = {}
-        for sub_key, keys in by_sub.items():
-            sub = self._subs_get(sub_key)
-            if sub is None:
-                continue
-            fast = self._fast_get(sub_key)
-            t0 = time.perf_counter()
-            if fast is not None:
-                knobs = fast.select_many([k[3] for k in keys])
-            else:
-                knobs = [sub.select(k[3]) for k in keys]
-            # eval statistics live on the (backend, op) shard, like the
-            # one-at-a-time miss path
-            self._shard(sub_key[:2]).count_eval(
-                time.perf_counter() - t0, n=len(keys))
-            for key, knob in zip(keys, knobs):
+        # one shared Event backs every key this call leads (they resolve
+        # together in the fused evaluation), and registration takes each
+        # shard's lock once for its whole key group — per-key locking and
+        # Event allocation were measurable on the 64-key batched path
+        batch_event = threading.Event()
+        for shard, keys in shard_groups.items():
+            with shard.lock:
+                for key in keys:
+                    ent = shard.inflight.get(key)
+                    if ent is None:
+                        ent = shard.inflight[key] = _Inflight(batch_event)
+                        owned[key] = (ent, shard)
+                    else:
+                        followers[key] = ent
+        for key in list(owned):
+            # we lead these keys — re-probe after winning leadership (a
+            # previous leader may have stored one between our lock-free
+            # miss and here), keeping "one eval per key" exact; the entry
+            # stays registered until the shared release below
+            knob = self._cache_get(key)
+            if knob is not None:
                 resolved[key] = knob
-        if resolved:
-            with self._lock:
-                for key, knob in resolved.items():
-                    self._store_locked(key, knob)
+                if record_hits:
+                    self._record_hit(key[0], key)
+                continue
+            by_sub.setdefault(key[:3], []).append(key)
+        try:
+            for sub_key, keys in by_sub.items():
+                sub = self._subs_get(sub_key)
+                fast = self._fast_get(sub_key)
+                t0 = time.perf_counter()
+                if fast is not None:
+                    knobs = fast.select_many([k[3] for k in keys])
+                else:
+                    knobs = [sub.select(k[3]) for k in keys]
+                # eval statistics live on the (backend, op) shard, like
+                # the one-at-a-time miss path
+                self._shard(sub_key[:2]).count_eval(
+                    time.perf_counter() - t0, n=len(keys))
+                for key, knob in zip(keys, knobs):
+                    resolved[key] = knob
+            if owned:
+                with self._lock:
+                    for key in owned:
+                        knob = resolved.get(key)
+                        if knob is not None:
+                            self._store_locked(key, knob)
+        finally:
+            # release owned entries BEFORE waiting on anyone else's (no
+            # wait cycles possible); a failed evaluation releases with
+            # knob=None so racers fall back to their own eval.  Knobs are
+            # published before the single shared-event set, and the
+            # removals take each shard's lock once.
+            for key, (ent, _shard) in owned.items():
+                ent.knob = resolved.get(key)
+            batch_event.set()
+            for shard, keys in shard_groups.items():
+                with shard.lock:
+                    for key in keys:
+                        if key in owned:
+                            shard.inflight.pop(key, None)
+        # absorb keys someone else was already evaluating — their eval,
+        # their eval-count; recorded as a hit only when hits are recorded
+        for key, ent in followers.items():
+            if ent.event.wait(timeout=60.0) and ent.knob is not None:
+                resolved[key] = ent.knob
+                if record_hits:
+                    self._record_hit(key[0], key)
+            else:                             # timed out / leader failed
+                resolved[key] = self.select(key[1], key[3], key[2],
+                                            backend=key[0])
         for key, slots in misses.items():
             knob = resolved.get(key)
             if knob is None:

@@ -1,0 +1,37 @@
+"""Leading-batch-axis grid transformation, shared by every Pallas kernel.
+
+A stack of problems (operands carrying a leading batch axis) executes as
+ONE pallas_call whose leading grid dimension is the batch width: every
+BlockSpec gains a length-1 leading block indexed by the batch coordinate,
+the grid/out_shape are prefixed with the width, and the new dimension is
+``parallel`` (items are independent).  Kernels detect the extra axis via
+their ``off`` parameter (grid-axis indices shift by one) and read/write
+``ref[0]`` instead of ``ref[...]``.
+
+One implementation — gemm, symm, syrk/syr2k, and trmm all apply the same
+transformation, and a divergent copy would compile but mis-index.
+"""
+
+from __future__ import annotations
+
+__all__ = ["with_batch_axis"]
+
+
+def with_batch_axis(batch, grid, in_maps, in_blocks, out_map, out_block,
+                    semantics, out_shape):
+    """Prefix a leading batch grid dimension; identity when ``batch`` is
+    None.  Returns the transformed ``(grid, in_maps, in_blocks, out_map,
+    out_block, semantics, out_shape)`` tuple."""
+    if batch is None:
+        return (grid, in_maps, in_blocks, out_map, out_block, semantics,
+                out_shape)
+    in_maps = [lambda bt, *gi, f=f: (bt,) + tuple(f(*gi)) for f in in_maps]
+    in_blocks = [(1,) + tuple(blk) for blk in in_blocks]
+    inner_out = out_map
+
+    def batched_out(bt, *gi):
+        return (bt,) + tuple(inner_out(*gi))
+
+    return ((batch,) + tuple(grid), in_maps, in_blocks, batched_out,
+            (1,) + tuple(out_block), ("parallel",) + tuple(semantics),
+            (batch,) + tuple(out_shape))

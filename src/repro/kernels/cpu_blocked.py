@@ -65,10 +65,12 @@ def _symm(a, b, c, alpha, beta, bm, bk, bn, variant):
 
 
 def _syrk(a, b, c, alpha, beta, bm, bk, bn, variant):
-    # b is None for syrk, =B for syr2k
+    # b is None for syrk, =B for syr2k.  'tri_packed' is a launch-grid
+    # notion (packed vs masked-out dead cells) — on the numpy path both
+    # triangle variants execute the identical packed loop below.
     n, k = a.shape
     out = np.zeros((n, n), dtype=np.promote_types(a.dtype, np.float32))
-    tri = variant == "tri"
+    tri = variant in ("tri", "tri_packed")
     for i0 in range(0, n, bm):
         i1 = min(i0 + bm, n)
         for j0 in range(0, n, bm):
@@ -98,7 +100,7 @@ def _trmm(a, b, c, alpha, beta, bm, bk, bn, variant):
     m = a.shape[0]
     n = b.shape[1]
     out = np.zeros((m, n), dtype=np.promote_types(a.dtype, np.float32))
-    tri = variant == "tri"
+    tri = variant in ("tri", "tri_packed")
     for i0 in range(0, m, bm):
         i1 = min(i0 + bm, m)
         for j0 in range(0, n, bn):

@@ -1,11 +1,27 @@
 """GEMM Pallas TPU kernel: C := alpha*A@B + beta*C with (bm, bk, bn) VMEM
 tiling — the op whose block config ADSALA tunes at runtime.
 
-Grid is (⌈m/bm⌉, ⌈n/bn⌉, ⌈k/bk⌉) with the contraction dim innermost and
-marked ``arbitrary`` (sequential revisits of the same output block); the two
-output dims are ``parallel``.  A float32 VMEM scratch accumulator holds the
-partial C tile across k steps so low-precision inputs (bf16) accumulate at
-full precision in the MXU.
+Zero-copy execution: the grid is (⌈m/bm⌉, ⌈n/bn⌉, ⌈k/bk⌉) over the *unpadded*
+operands.  Ragged edge tiles are handled in-kernel — out-of-bounds reads of
+the last contraction tile return undefined values (NaN in interpret mode),
+so both dot operands mask their ragged k-columns/rows to zero with an iota
+bound check; out-of-bounds output rows/cols are dropped by Pallas on the
+store.  When every dim divides its block the masks vanish at trace time, so
+the aligned path compiles to exactly the pre-masking kernel.  The masked
+zeros occupy the same lanes as the old zero-padded operands, so masked and
+padded execution are bit-identical.
+
+The contraction dim is innermost and marked ``arbitrary`` (sequential
+revisits of the same output block); the two output dims are ``parallel``.  A
+float32 VMEM scratch accumulator holds the partial C tile across k steps so
+low-precision inputs (bf16) accumulate at full precision in the MXU.
+
+A leading batch axis on the operands (``(B, m, k)``) becomes a leading
+``parallel`` grid dimension — one pallas_call executes the whole stack (the
+serving layer's bucket primitive), replacing the old ``jax.vmap`` lift.
+The C operand is only an input when ``beta != 0`` and a C was given; the
+old path materialised a ``jnp.zeros`` C (and DMA'd it) even for the
+``beta == 0`` common case.
 """
 
 from __future__ import annotations
@@ -17,27 +33,57 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._batching import with_batch_axis
 from ._compat import CompilerParams
 
 __all__ = ["gemm_pallas"]
 
 
-def _gemm_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, alpha, beta):
-    k = pl.program_id(2)
+def mask_cols(x, block: int, step, dim: int):
+    """Zero the columns of tile ``x`` whose global index (``step``-th block
+    of width ``block``) falls at or beyond ``dim`` — the ragged tail mask."""
+    ids = block * step + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    return jnp.where(ids < dim, x, jnp.zeros_like(x))
 
-    @pl.when(k == 0)
+
+def mask_rows(x, block: int, step, dim: int):
+    """Row-axis twin of :func:`mask_cols`."""
+    ids = block * step + jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+    return jnp.where(ids < dim, x, jnp.zeros_like(x))
+
+
+def _gemm_kernel(*refs, alpha, beta, k, bk, has_c, off):
+    """``refs`` = (a, b[, c], o, acc); ``off`` = 1 when a leading batch grid
+    dim is present (refs then carry a leading length-1 block axis)."""
+    if has_c:
+        a_ref, b_ref, c_ref, o_ref, acc_ref = refs
+    else:
+        a_ref, b_ref, o_ref, acc_ref = refs
+    l = pl.program_id(off + 2)
+
+    @pl.when(l == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
-                            preferred_element_type=jnp.float32)
+    a = a_ref[0] if off else a_ref[...]
+    b = b_ref[0] if off else b_ref[...]
+    if k % bk:
+        # ragged contraction tail: both operands masked (OOB reads are
+        # undefined, and 0 * garbage is still garbage when garbage is NaN)
+        a = mask_cols(a, bk, l, k)
+        b = mask_rows(b, bk, l, k)
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
 
-    @pl.when(k == pl.num_programs(2) - 1)
+    @pl.when(l == pl.num_programs(off + 2) - 1)
     def _flush():
         out = alpha * acc_ref[...]
-        if beta != 0.0:
-            out = out + beta * c_ref[...].astype(jnp.float32)
-        o_ref[...] = out.astype(o_ref.dtype)
+        if has_c:
+            c = c_ref[0] if off else c_ref[...]
+            out = out + beta * c.astype(jnp.float32)
+        if off:
+            o_ref[0] = out.astype(o_ref.dtype)
+        else:
+            o_ref[...] = out.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "alpha",
@@ -45,27 +91,36 @@ def _gemm_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, alpha, beta):
 def gemm_pallas(a, b, c=None, *, bm: int = 128, bk: int = 128, bn: int = 128,
                 alpha: float = 1.0, beta: float = 0.0,
                 interpret: bool = False):
-    """alpha*A@B + beta*C. Shapes must divide the block config (ops.py pads)."""
-    m, k = a.shape
-    k2, n = b.shape
+    """alpha*A@B + beta*C for arbitrary (ragged) shapes; a leading batch
+    axis executes as one batched grid."""
+    *lead, m, k = a.shape
+    k2, n = b.shape[-2:]
     assert k == k2, (a.shape, b.shape)
-    assert m % bm == 0 and k % bk == 0 and n % bn == 0, \
-        f"(m,k,n)=({m},{k},{n}) not divisible by blocks ({bm},{bk},{bn})"
-    if c is None:
-        c = jnp.zeros((m, n), a.dtype)
-    grid = (m // bm, n // bn, k // bk)
+    assert len(lead) <= 1 and b.shape[:-2] == tuple(lead)
+    batch = lead[0] if lead else None
+    has_c = c is not None and beta != 0.0
+    off = 1 if batch is not None else 0
+
+    grid, in_maps, in_blocks, out_map, out_block, semantics, out_shape = \
+        with_batch_axis(
+            batch, (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk)),
+            [lambda i, j, l: (i, l), lambda i, j, l: (l, j),
+             lambda i, j, l: (i, j)],
+            [(bm, bk), (bk, bn), (bm, bn)],
+            lambda i, j, l: (i, j), (bm, bn),
+            ("parallel", "parallel", "arbitrary"), (m, n))
+
+    operands = [a, b] + ([c] if has_c else [])
+    in_specs = [pl.BlockSpec(blk, f)
+                for blk, f in zip(in_blocks, in_maps)][: len(operands)]
     return pl.pallas_call(
-        functools.partial(_gemm_kernel, alpha=alpha, beta=beta),
+        functools.partial(_gemm_kernel, alpha=alpha, beta=beta, k=k, bk=bk,
+                          has_c=has_c, off=off),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
-            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
-            pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(out_block, out_map),
+        out_shape=jax.ShapeDtypeStruct(out_shape, a.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=CompilerParams(dimension_semantics=semantics),
         interpret=interpret,
-    )(a, b, c)
+    )(*operands)

@@ -5,8 +5,11 @@ Each op:
      globally installed) for the argmin-predicted block config at the call's
      dims — at *trace* time, so the decision costs nothing per executed step
      and is memoized across identical shapes (paper Fig. 1b);
-  2. zero-pads operands to block multiples (identity-pads the TRSM diagonal);
-  3. dispatches to the Pallas kernel; slices the result back.
+  2. dispatches to the Pallas kernel *zero-copy*: grids are ⌈dim/block⌉ over
+     the unpadded operands and ragged edge tiles are masked in-kernel, so no
+     operand copy, pad, or result slice-back ever materializes (the old
+     pad-to-block-multiple path is gone).  Operands carrying a leading batch
+     axis execute as one batched grid — one pallas_call per stack.
 
 The knob spaces used by install-time calibration live here too, so the tuner
 and the executor can never disagree about the candidate set.
@@ -70,8 +73,12 @@ def knob_space_for(op: str, *, small: bool = False,
     """Candidate block configs per subroutine.
 
     GEMM tunes (bm, bk, bn); the 2-dim subroutines tune (bm, bn) with the
-    A-dimension block tied to bm (square A tiles), plus the 'full'/'tri'
-    kernel variant for the triangular/symmetric-output ops.
+    A-dimension block tied to bm (square A tiles), plus the kernel variant
+    for the triangular/symmetric-output ops: 'full' (every block computed),
+    'tri' (dead blocks skip MXU work but still occupy grid cells), and
+    'tri_packed' (only the n(n+1)/2 live blocks are launched, mirror done
+    in-kernel) — three genuinely different execution strategies for the
+    model to discriminate between.
 
     ``sizes`` overrides the block-edge candidates: TPU targets default to
     MXU-aligned (128, 256, 512); CPU-host calibration passes cache-scale
@@ -81,7 +88,8 @@ def knob_space_for(op: str, *, small: bool = False,
         sizes = (128, 256) if small else (128, 256, 512)
     if op == "gemm":
         return block_knob_space(bms=sizes, bks=sizes, bns=sizes)
-    variants = ("full", "tri") if op in ("syrk", "syr2k", "trmm") else ("full",)
+    variants = ("full", "tri", "tri_packed") \
+        if op in ("syrk", "syr2k", "trmm") else ("full",)
     space = block_knob_space(bms=sizes, bks=(128,), bns=sizes,
                              variants=variants)
     # collapse bk (unused for 2-dim ops) out of the candidate identity
@@ -278,100 +286,69 @@ def _select(op: str, dims: tuple[int, ...], dtype,
                                 default_knob(op), backend="pallas")
 
 
-def _pad_to(x, rows: int, cols: int):
-    m, n = x.shape
-    if m == rows and n == cols:
-        return x
-    return jnp.pad(x, ((0, rows - m), (0, cols - n)))
-
-
 def _rup(v: int, b: int) -> int:
     return ((v + b - 1) // b) * b
 
 
 # ---------------------------------------------------------------------------
-# public ops
+# public ops (zero-copy: masked kernels take the unpadded operands directly;
+# a leading batch axis on every operand executes as one batched grid)
 # ---------------------------------------------------------------------------
 
 def gemm(a, b, c=None, *, alpha=1.0, beta=0.0, knob=None, runtime=None,
          interpret: bool = False):
-    m, k = a.shape
-    _, n = b.shape
+    m, k = a.shape[-2:]
+    n = b.shape[-1]
     kb = _select("gemm", (m, k, n), a.dtype, knob, runtime).dict
     bm, bk, bn = (min(kb["bm"], _rup(m, 128)), min(kb["bk"], _rup(k, 128)),
                   min(kb["bn"], _rup(n, 128)))
-    M, K, N = _rup(m, bm), _rup(k, bk), _rup(n, bn)
-    cp = _pad_to(c, M, N) if c is not None else None
-    out = gemm_pallas(_pad_to(a, M, K), _pad_to(b, K, N), cp,
-                      bm=bm, bk=bk, bn=bn, alpha=alpha, beta=beta,
-                      interpret=interpret)
-    return out[:m, :n]
+    return gemm_pallas(a, b, c, bm=bm, bk=bk, bn=bn, alpha=alpha, beta=beta,
+                       interpret=interpret)
 
 
 def symm(a, b, c=None, *, alpha=1.0, beta=0.0, knob=None, runtime=None,
          interpret: bool = False):
-    m, n = a.shape[0], b.shape[1]
+    m, n = a.shape[-2], b.shape[-1]
     kb = _select("symm", (m, n), a.dtype, knob, runtime).dict
     bm, bn = min(kb["bm"], _rup(m, 128)), min(kb["bn"], _rup(n, 128))
-    M, N = _rup(m, bm), _rup(n, bn)
-    cp = _pad_to(c, M, N) if c is not None else None
-    out = symm_pallas(_pad_to(a, M, M), _pad_to(b, M, N), cp,
-                      bm=bm, bn=bn, alpha=alpha, beta=beta,
-                      interpret=interpret)
-    return out[:m, :n]
+    return symm_pallas(a, b, c, bm=bm, bn=bn, alpha=alpha, beta=beta,
+                       interpret=interpret)
 
 
 def syrk(a, c=None, *, alpha=1.0, beta=0.0, knob=None, runtime=None,
          interpret: bool = False):
-    n, k = a.shape
+    n, k = a.shape[-2:]
     kb = _select("syrk", (n, k), a.dtype, knob, runtime).dict
     bm, bk = min(kb["bm"], _rup(n, 128)), min(kb["bn"], _rup(k, 128))
-    N, K = _rup(n, bm), _rup(k, bk)
-    cp = _pad_to(c, N, N) if c is not None else None
-    out = syrk_pallas(_pad_to(a, N, K), cp, bm=bm, bk=bk, alpha=alpha,
-                      beta=beta, variant=kb.get("variant", "full"),
-                      interpret=interpret)
-    return out[:n, :n]
+    return syrk_pallas(a, c, bm=bm, bk=bk, alpha=alpha, beta=beta,
+                       variant=kb.get("variant", "full"), interpret=interpret)
 
 
 def syr2k(a, b, c=None, *, alpha=1.0, beta=0.0, knob=None, runtime=None,
           interpret: bool = False):
-    n, k = a.shape
+    n, k = a.shape[-2:]
     kb = _select("syr2k", (n, k), a.dtype, knob, runtime).dict
     bm, bk = min(kb["bm"], _rup(n, 128)), min(kb["bn"], _rup(k, 128))
-    N, K = _rup(n, bm), _rup(k, bk)
-    cp = _pad_to(c, N, N) if c is not None else None
-    out = syr2k_pallas(_pad_to(a, N, K), _pad_to(b, N, K), cp, bm=bm, bk=bk,
-                       alpha=alpha, beta=beta,
-                       variant=kb.get("variant", "full"), interpret=interpret)
-    return out[:n, :n]
+    return syr2k_pallas(a, b, c, bm=bm, bk=bk, alpha=alpha, beta=beta,
+                        variant=kb.get("variant", "full"),
+                        interpret=interpret)
 
 
 def trmm(a, b, *, alpha=1.0, knob=None, runtime=None,
          interpret: bool = False):
-    m, n = a.shape[0], b.shape[1]
+    m, n = a.shape[-2], b.shape[-1]
     kb = _select("trmm", (m, n), a.dtype, knob, runtime).dict
     bm, bn = min(kb["bm"], _rup(m, 128)), min(kb["bn"], _rup(n, 128))
-    M, N = _rup(m, bm), _rup(n, bn)
-    out = trmm_pallas(_pad_to(a, M, M), _pad_to(b, M, N), bm=bm, bn=bn,
-                      alpha=alpha, variant=kb.get("variant", "full"),
-                      interpret=interpret)
-    return out[:m, :n]
+    return trmm_pallas(a, b, bm=bm, bn=bn, alpha=alpha,
+                       variant=kb.get("variant", "full"), interpret=interpret)
 
 
 def trsm(a, b, *, alpha=1.0, knob=None, runtime=None,
          interpret: bool = False):
-    m, n = a.shape[0], b.shape[1]
+    m, n = a.shape[-2], b.shape[-1]
     kb = _select("trsm", (m, n), a.dtype, knob, runtime).dict
     bm, bn = min(kb["bm"], _rup(m, 128)), min(kb["bn"], _rup(n, 128))
-    M, N = _rup(m, bm), _rup(n, bn)
-    ap = _pad_to(a, M, M)
-    if M > m:  # identity-pad the diagonal so padded solves stay well-posed
-        pad_eye = jnp.eye(M, dtype=a.dtype).at[:m, :m].set(0)
-        ap = ap + pad_eye
-    out = trsm_pallas(ap, _pad_to(b, M, N), bm=bm, bn=bn, alpha=alpha,
-                      interpret=interpret)
-    return out[:m, :n]
+    return trsm_pallas(a, b, bm=bm, bn=bn, alpha=alpha, interpret=interpret)
 
 
 #: the pallas-path executors (what the ``pallas`` backend dispatches to)

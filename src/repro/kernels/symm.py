@@ -12,6 +12,11 @@ reconstructs the symmetric block on the fly:
 A-blocks are square (bm × bm) so the mirrored view has the same block shape.
 Loading two views costs ≤2× A-tile traffic; the ADSALA tuner sees that cost
 in its measured/For-oracle timings and sizes blocks accordingly.
+
+Zero-copy: the grid is ⌈·⌉-sized over the unpadded operands; the ragged
+contraction tail masks both dot operands in-kernel (see ``gemm.mask_cols``),
+OOB output rows/cols are dropped on store, and the C operand only exists
+when ``beta != 0``.  A leading batch axis becomes a leading grid dimension.
 """
 
 from __future__ import annotations
@@ -23,32 +28,46 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._batching import with_batch_axis
 from ._compat import CompilerParams
+from .gemm import mask_cols, mask_rows
 
 __all__ = ["symm_pallas"]
 
 
-def _symm_kernel(a_il_ref, a_li_ref, b_ref, c_ref, o_ref, acc_ref, *,
-                 alpha, beta):
-    i = pl.program_id(0)
-    l = pl.program_id(2)
+def _symm_kernel(*refs, alpha, beta, m, bm, has_c, off):
+    if has_c:
+        a_il_ref, a_li_ref, b_ref, c_ref, o_ref, acc_ref = refs
+    else:
+        a_il_ref, a_li_ref, b_ref, o_ref, acc_ref = refs
+    i = pl.program_id(off + 0)
+    l = pl.program_id(off + 2)
 
     @pl.when(l == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a_il = a_il_ref[...]
-    a_li = a_li_ref[...]
+    a_il = a_il_ref[0] if off else a_il_ref[...]
+    a_li = a_li_ref[0] if off else a_li_ref[...]
+    b = b_ref[0] if off else b_ref[...]
     diag = jnp.tril(a_il) + jnp.tril(a_il, -1).T
     a = jnp.where(i > l, a_il, jnp.where(i < l, a_li.T, diag))
-    acc_ref[...] += jnp.dot(a, b_ref[...], preferred_element_type=jnp.float32)
+    if m % bm:
+        # ragged contraction tail (the contraction dim of symm is m itself)
+        a = mask_cols(a, bm, l, m)
+        b = mask_rows(b, bm, l, m)
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
 
-    @pl.when(l == pl.num_programs(2) - 1)
+    @pl.when(l == pl.num_programs(off + 2) - 1)
     def _flush():
         out = alpha * acc_ref[...]
-        if beta != 0.0:
-            out = out + beta * c_ref[...].astype(jnp.float32)
-        o_ref[...] = out.astype(o_ref.dtype)
+        if has_c:
+            c = c_ref[0] if off else c_ref[...]
+            out = out + beta * c.astype(jnp.float32)
+        if off:
+            o_ref[0] = out.astype(o_ref.dtype)
+        else:
+            o_ref[...] = out.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "alpha", "beta",
@@ -56,26 +75,34 @@ def _symm_kernel(a_il_ref, a_li_ref, b_ref, c_ref, o_ref, acc_ref, *,
 def symm_pallas(a, b, c=None, *, bm: int = 128, bn: int = 128,
                 alpha: float = 1.0, beta: float = 0.0,
                 interpret: bool = False):
-    m, m2 = a.shape
-    mb, n = b.shape
+    *lead, m, m2 = a.shape
+    mb, n = b.shape[-2:]
     assert m == m2 == mb
-    assert m % bm == 0 and n % bn == 0
-    if c is None:
-        c = jnp.zeros((m, n), a.dtype)
-    grid = (m // bm, n // bn, m // bm)
+    assert len(lead) <= 1 and b.shape[:-2] == tuple(lead)
+    batch = lead[0] if lead else None
+    has_c = c is not None and beta != 0.0
+    off = 1 if batch is not None else 0
+
+    grid, in_maps, in_blocks, out_map, out_block, semantics, out_shape = \
+        with_batch_axis(
+            batch, (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(m, bm)),
+            [lambda i, j, l: (i, l), lambda i, j, l: (l, i),
+             lambda i, j, l: (l, j), lambda i, j, l: (i, j)],
+            [(bm, bm), (bm, bm), (bm, bn), (bm, bn)],
+            lambda i, j, l: (i, j), (bm, bn),
+            ("parallel", "parallel", "arbitrary"), (m, n))
+
+    operands = [a, a, b] + ([c] if has_c else [])
+    in_specs = [pl.BlockSpec(blk, f)
+                for blk, f in zip(in_blocks, in_maps)][: len(operands)]
     return pl.pallas_call(
-        functools.partial(_symm_kernel, alpha=alpha, beta=beta),
+        functools.partial(_symm_kernel, alpha=alpha, beta=beta, m=m, bm=bm,
+                          has_c=has_c, off=off),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bm), lambda i, j, l: (i, l)),   # A[i,l]
-            pl.BlockSpec((bm, bm), lambda i, j, l: (l, i)),   # A[l,i]
-            pl.BlockSpec((bm, bn), lambda i, j, l: (l, j)),   # B[l,j]
-            pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),   # C[i,j]
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(out_block, out_map),
+        out_shape=jax.ShapeDtypeStruct(out_shape, a.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=CompilerParams(dimension_semantics=semantics),
         interpret=interpret,
-    )(a, a, b, c)
+    )(*operands)

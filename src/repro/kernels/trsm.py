@@ -4,7 +4,7 @@ A GPU TRSM serialises scalar forward substitution inside the kernel; the
 TPU-native formulation (DESIGN.md §2, hardware adaptation) is *blocked
 forward substitution driven by GEMM*:
 
-    1. invert the (bm × bm) diagonal blocks once:  Dᵢ⁻¹
+    1. invert the diagonal blocks once:  Dᵢ⁻¹
        (small triangular solves against I — XLA's triangular_solve, runs on
        the MXU; O(m·bm²) total, negligible vs. the O(m²·n) updates)
     2. for each block row i (sequential, ⌈m/bm⌉ steps):
@@ -14,7 +14,14 @@ forward substitution driven by GEMM*:
 This keeps >95% of the FLOPs inside the tuned Pallas GEMM; many production
 BLAS (cuBLAS, oneMKL) use exactly this inversion-based scheme for large
 TRSM.  The sequential loop over block rows is a Python loop at trace time —
-the number of blocks is static.
+the number of blocks is static, so every slice below is a *static* slice.
+
+Zero-copy: the masked GEMM accepts ragged shapes directly, so no operand is
+ever padded — the last (ragged) diagonal block is solved at its true
+(r × r) size instead of the old identity-padded (bm × bm) solve, and a
+leading batch axis flows through every step natively (batched
+triangular_solve + batched GEMM grids), replacing the old ``jax.vmap``
+lift.
 """
 
 from __future__ import annotations
@@ -34,30 +41,28 @@ __all__ = ["trsm_pallas"]
 def trsm_pallas(a, b, *, bm: int = 128, bn: int = 128, alpha: float = 1.0,
                 variant: str = "full", interpret: bool = False):
     del variant  # blocked substitution already does minimal (tri) FLOPs
-    m, m2 = a.shape
-    mb, n = b.shape
+    *lead, m, m2 = a.shape
+    mb, n = b.shape[-2:]
     assert m == m2 == mb
-    assert m % bm == 0 and n % bn == 0
-    nblk = m // bm
+    assert len(lead) <= 1 and b.shape[:-2] == tuple(lead)
+    nblk = -(-m // bm)
 
-    # 1. diagonal block inverses (batched small triangular solves)
-    diag = jnp.stack([jax.lax.dynamic_slice(a, (i * bm, i * bm), (bm, bm))
-                      for i in range(nblk)])                     # (nblk,bm,bm)
-    eye = jnp.broadcast_to(jnp.eye(bm, dtype=a.dtype), diag.shape)
-    dinv = jax.lax.linalg.triangular_solve(
-        jnp.tril(diag), eye, left_side=True, lower=True)         # (nblk,bm,bm)
-
-    # 2. blocked forward substitution; X accumulated block-row by block-row
-    x = jnp.zeros((m, n), a.dtype)
+    x = jnp.zeros((*lead, m, n), a.dtype)
     for i in range(nblk):
-        r = alpha * jax.lax.dynamic_slice(b, (i * bm, 0), (bm, n))
+        lo, hi = i * bm, min((i + 1) * bm, m)
+        # diagonal block inverse at its true (possibly ragged) size
+        d = jnp.tril(a[..., lo:hi, lo:hi])
+        eye = jnp.eye(hi - lo, dtype=a.dtype)
+        if lead:
+            eye = jnp.broadcast_to(eye, d.shape)
+        dinv = jax.lax.linalg.triangular_solve(d, eye, left_side=True,
+                                               lower=True)
+        r = alpha * b[..., lo:hi, :]
         if i > 0:
-            a_row = jax.lax.dynamic_slice(a, (i * bm, 0), (bm, i * bm))
-            x_done = jax.lax.dynamic_slice(x, (0, 0), (i * bm, n))
-            upd = gemm_pallas(a_row, x_done, bm=bm, bk=bm, bn=bn,
-                              interpret=interpret)
+            upd = gemm_pallas(a[..., lo:hi, :lo], x[..., :lo, :],
+                              bm=bm, bk=bm, bn=bn, interpret=interpret)
             r = r - upd.astype(r.dtype)
-        xi = gemm_pallas(dinv[i], r, bm=bm, bk=bm, bn=bn,
-                         interpret=interpret)
-        x = jax.lax.dynamic_update_slice(x, xi.astype(x.dtype), (i * bm, 0))
+        xi = gemm_pallas(dinv, r, bm=bm, bk=bm, bn=bn, interpret=interpret)
+        x = jax.lax.dynamic_update_slice(
+            x, xi.astype(x.dtype), (0,) * len(lead) + (lo, 0))
     return x

@@ -7,8 +7,9 @@ import numpy as np
 import pytest
 
 from repro.backends import L3_OPS, available_backends, get_backend
-from repro.backends.conformance import (DEFAULT_DIMS, check_backend_op,
-                                        oracle, tolerance_for)
+from repro.backends.conformance import (DEFAULT_DIMS, RAGGED_DIMS,
+                                        check_backend_op, oracle,
+                                        tolerance_for)
 
 BACKENDS = available_backends()
 DTYPES = pytest.mark.parametrize(
@@ -43,6 +44,35 @@ def test_stacked_matches_oracle(backend, op):
     three independent oracle calls (the serving layer's batch primitive)."""
     _gate(backend, op, np.float32)
     res = check_backend_op(backend, op, np.float32, stacked=3, seed=11)
+    assert res.skipped is None and res.error is None, res.line()
+    assert res.ok, res.line()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("op", L3_OPS)
+@pytest.mark.parametrize("ragged_idx", (0, 1, 2),
+                         ids=("ragged-tail", "one-row", "off-square"))
+@DTYPES
+def test_ragged_matches_oracle(backend, op, ragged_idx, dtype):
+    """Non-block-multiple dims across every op × backend: a ragged last
+    tile behind full tiles, a single-row problem, and an off-multiple
+    square — the masked edge tiles of the zero-copy kernels at their
+    corners."""
+    _gate(backend, op, dtype)
+    dims = RAGGED_DIMS[op][ragged_idx]
+    res = check_backend_op(backend, op, dtype, dims=dims, seed=17)
+    assert res.skipped is None and res.error is None, res.line()
+    assert res.ok, res.line()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("op", L3_OPS)
+def test_ragged_stacked_matches_oracle(backend, op):
+    """The stacked (leading-batch-grid) path at ragged dims — a width-2
+    stack of distinct ragged problems equals two oracle calls."""
+    _gate(backend, op, np.float32)
+    res = check_backend_op(backend, op, np.float32,
+                           dims=RAGGED_DIMS[op][0], stacked=2, seed=23)
     assert res.skipped is None and res.error is None, res.line()
     assert res.ok, res.line()
 

@@ -3,6 +3,7 @@ path (all six ops x both dtypes x every persisted model family), lock-free
 hit-path concurrency (stats stay exact), and select_many equivalence with N
 individual selects."""
 
+import random
 import threading
 
 import numpy as np
@@ -231,6 +232,41 @@ def test_screened_knn_screen_path_parity():
             rng.normal(size=(4, C)) * 5.0,        # far queries
         ])
         assert np.array_equal(sk.predict(Q), m.predict(Q)), (k, weights)
+
+
+def test_screened_knn_workspace_reuse_is_bit_stable():
+    """The per-thread screen workspace (PR 5: persistent Z32/d2a buffers
+    keyed by query-row count) must return the same bits call after call —
+    and per-thread buffers must not be shared across threads."""
+    import threading
+
+    from repro.core.fastpath import _ScreenedKNN
+    from repro.core.ml.knn import KNN
+    rng = np.random.default_rng(21)
+    X = rng.normal(size=(500, 6))
+    m = KNN(k=7).fit(X, rng.normal(size=500))
+    sk = _ScreenedKNN(m)
+    Q = rng.normal(size=(27, 6))
+    first = sk.predict(Q)
+    # buffer reuse: same Q-row count hits the same per-thread workspace
+    b1 = sk._screen_buffers(27, 6)
+    assert sk._screen_buffers(27, 6)[0] is b1[0]
+    for _ in range(3):
+        assert np.array_equal(sk.predict(Q), first)
+    assert np.array_equal(first, m.predict(Q))
+    # distinct row counts get distinct buffers; threads get their own
+    assert sk._screen_buffers(9, 6)[1] is not b1[1]
+    seen = {}
+
+    def worker():
+        seen[threading.get_ident()] = sk._screen_buffers(27, 6)[0]
+        assert np.array_equal(sk.predict(Q), first)
+
+    t = threading.Thread(target=worker)
+    t.start()
+    t.join()
+    (tid, buf), = seen.items()
+    assert tid != threading.get_ident() and buf is not b1[0]
 
 
 def test_screened_knn_nonfinite_queries_fall_back():
@@ -552,6 +588,45 @@ def test_miss_coalescing_single_eval():
     assert s.model_evals == 1
     assert s.cache_hits == n_threads - 1
     assert s.calls == s.cache_hits + s.model_evals + s.default_calls
+
+
+def test_select_many_coalesces_with_concurrent_select():
+    """select_many racing concurrent select calls on the same uncached key
+    (the serving prewarm vs a stealing worker) must still cost exactly ONE
+    model evaluation per distinct key — select_many's miss path joins the
+    same in-flight protocol as the one-at-a-time path."""
+    for trial in range(5):
+        rt = AdsalaRuntime()
+        stub = SlowStubSub("b0")
+        rt.register(stub)
+        dims_list = [(64, 64, 64), (96, 96, 96), (128, 128, 128)]
+        results, errors = [], []
+
+        def many():
+            try:
+                results.append(rt.select_many(
+                    [("gemm", d, 4, "b0") for d in dims_list],
+                    record_hits=False))
+            except Exception as e:    # noqa: BLE001
+                errors.append(e)
+
+        def single(d):
+            try:
+                results.append(rt.select("gemm", d, 4, backend="b0"))
+            except Exception as e:    # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=many),
+                   threading.Thread(target=many)] + \
+            [threading.Thread(target=single, args=(d,)) for d in dims_list]
+        random.shuffle(threads)
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        assert stub.evals == len(dims_list), trial
+        assert rt.stats.model_evals == len(dims_list), trial
 
 
 def test_miss_shards_are_per_backend_op():
