@@ -1,0 +1,328 @@
+#!/usr/bin/env python
+"""Model-serving bench for ADSALA-dispatched GEMMs → ``BENCH_model.json``.
+
+Three claims about routing a transformer's dense matmuls through
+``run_op`` / :class:`~repro.core.runtime.AdsalaRuntime` (PR 6), each
+measured per PR and gated by ``scripts/bench_diff.py --model-fresh``:
+
+  * **bit-identical routing** — with every contraction dim inside one
+    k-tile (≤ 128), the routed forward / prefill / decode_step of a dense,
+    a MoE and an MLA smoke config equal the plain ``x @ w`` path
+    *bitwise* (single-k-tile f32 accumulation is exact; the MoE expert
+    stack executes as one batched grid).  Deterministic — gated exactly.
+  * **zero cold evals after prewarm** — harvest → install → select_many →
+    ``save_decision_cache`` offline, then a fresh runtime hydrated from
+    the registry serves prefill + decode with **0** runtime model
+    evaluations (the same keys cost >0 evals without the cache).
+    Deterministic — gated exactly.
+  * **tuned ≥ default knobs** — jitted prefill tokens/s and per-step
+    decode latency under oracle-installed knobs vs the default
+    max-parallelism knob at serving-scale dims.  Wall-clock →
+    informational (advisory on low-core hosts), recorded for trajectory.
+
+    PYTHONPATH=src python benchmarks/model_bench.py --smoke --json /tmp/m.json
+    PYTHONPATH=src python benchmarks/model_bench.py --record pr6
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import platform
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_model.json"
+
+#: one arch per routed-model family; d_ff clamped so EVERY contraction dim
+#: (d_model, d_ff, moe_d_ff, kv_lora, n_heads·v_head_dim) fits a single
+#: 128-wide k-tile — the bitwise-equality regime (k-splitting regroups the
+#: f32 accumulation)
+PARITY_ARCHS = ("qwen1.5-4b", "granite-moe-3b-a800m", "deepseek-v2-lite-16b")
+
+
+def _parity_cfg(arch):
+    from repro.configs import get_smoke_config
+    return dataclasses.replace(get_smoke_config(arch),
+                               compute_dtype="float32",
+                               capacity_factor=8.0, d_ff=128)
+
+
+def _batch_for(cfg, B, S, seed=0):
+    import jax
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(seed),
+                                          (B, S), 0, cfg.vocab)}
+    if cfg.vision_tokens:
+        batch["vision"] = jax.random.normal(
+            jax.random.PRNGKey(seed + 1), (B, cfg.vision_tokens, 32))
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# claim 1: routed == unrouted, bitwise (deterministic; gated)
+# ---------------------------------------------------------------------------
+
+def parity_metrics() -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.core.runtime import AdsalaRuntime
+    from repro.models import transformer as tf
+
+    B, S = 2, 16
+    per_arch = {}
+    for arch in PARITY_ARCHS:
+        cfg = _parity_cfg(arch)
+        rcfg = dataclasses.replace(cfg, use_pallas_gemm=True)
+        params = tf.init_params(jax.random.PRNGKey(0), cfg)
+        batch = _batch_for(cfg, B, S)
+        rt = AdsalaRuntime()
+
+        ref, _ = tf.forward(params, batch, cfg)
+        out, _ = tf.forward(params, batch, rcfg, runtime=rt)
+        row = {"forward": bool(jnp.array_equal(ref, out))}
+
+        lu, cu = tf.prefill(params, batch, tf.init_decode_state(cfg, B, S + 4),
+                            cfg)
+        lr, cr = tf.prefill(params, batch,
+                            tf.init_decode_state(rcfg, B, S + 4), rcfg,
+                            runtime=rt)
+        row["prefill"] = bool(jnp.array_equal(lu, lr))
+        tok = jnp.argmax(lu[:, -1:], -1).astype(jnp.int32)
+        du, _ = tf.decode_step(params, tok, cu, cfg)
+        dr, _ = tf.decode_step(params, tok, cr, rcfg, runtime=rt)
+        row["decode"] = bool(jnp.array_equal(du, dr))
+        per_arch[arch] = row
+        print(f"[model_bench] parity {arch}: {row}")
+    all_ok = all(v for row in per_arch.values() for v in row.values())
+    return {"per_arch": per_arch, "routed_bit_identical": all_ok}
+
+
+# ---------------------------------------------------------------------------
+# claim 2: zero runtime model evals after offline prewarm (deterministic)
+# ---------------------------------------------------------------------------
+
+def prewarm_metrics() -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.backends import resolve_backend
+    from repro.core.oracle import oracle_time
+    from repro.core.registry import ModelRegistry
+    from repro.core.runtime import AdsalaRuntime
+    from repro.core.tuner import install_subroutine
+    from repro.models import transformer as tf
+    from repro.roofline.costing import prune_dominated_candidates
+    from repro.roofline.harvest import harvest_decision_keys
+
+    B, S = 2, 16
+    cfg = _parity_cfg(PARITY_ARCHS[0])
+    rcfg = dataclasses.replace(cfg, use_pallas_gemm=True)
+    backend = resolve_backend(rcfg.gemm_backend)
+
+    keys = harvest_decision_keys(rcfg, batch_size=B, seq_len=S,
+                                 programs=("prefill", "decode"))
+    dims_list = [k[3] for k in keys]
+    db = keys[0][2]
+    space = prune_dominated_candidates(
+        "gemm", backend.knob_space("gemm", sizes=(128, 256)), dims_list,
+        dtype_bytes=db)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        registry = ModelRegistry(tmp)
+        install_rt = AdsalaRuntime()
+        sub = install_subroutine(
+            "gemm", space,
+            lambda dims, knob: oracle_time("gemm", dims, knob,
+                                           dtype_bytes=db),
+            n_samples=40, dim_lo=16, dim_hi=256, dtype_bytes=db,
+            backend=backend.name, tune_trials=2)
+        registry.save(sub)
+        install_rt.register(sub)
+        install_rt.select_many([(op, dims, b, be)
+                                for (be, op, b, dims) in keys],
+                               record_hits=False)
+        registry.save_decision_cache(install_rt)
+
+        params = tf.init_params(jax.random.PRNGKey(0), rcfg)
+        batch = _batch_for(rcfg, B, S)
+
+        def serve(runtime) -> int:
+            caches = tf.init_decode_state(rcfg, B, S + 4)
+            logits, caches = tf.prefill(params, batch, caches, rcfg,
+                                        runtime=runtime)
+            tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+            tf.decode_step(params, tok, caches, rcfg, runtime=runtime)
+            return int(runtime.stats.for_backend(backend.name).model_evals)
+
+        cold = AdsalaRuntime()
+        registry.load_into(cold, backend=backend.name)
+        cold_evals = serve(cold)
+
+        warm = AdsalaRuntime()
+        registry.load_into(warm, backend=backend.name)
+        cached = registry.load_decision_cache(warm)
+        warm_evals = serve(warm)
+
+    out = {"harvested_keys": len(keys), "knob_candidates": len(space),
+           "cached_decisions": cached,
+           "cold_model_evals": cold_evals,
+           "prewarm_model_evals": warm_evals}
+    print(f"[model_bench] prewarm: {out}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# claim 3: tuned knobs vs default knobs, jitted serving loop (wall-clock)
+# ---------------------------------------------------------------------------
+
+def _median_wall(fn, repeats=3):
+    fn()                                     # compile/warm
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def timing_metrics(quick=False) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.core.oracle import oracle_time
+    from repro.core.runtime import AdsalaRuntime
+    from repro.core.tuner import install_subroutine
+    from repro.kernels.ops import knob_space_for
+    from repro.models import transformer as tf
+    from repro.roofline.harvest import harvest_decision_keys
+
+    # serving-scale dims: > 128 so block choices genuinely differ (the
+    # default max-parallelism knob runs many more grid cells than the
+    # oracle's preferred large blocks)
+    B, S = 1, 64 if quick else 128
+    cfg = dataclasses.replace(_parity_cfg(PARITY_ARCHS[0]),
+                              d_model=256, d_ff=512, n_heads=4,
+                              kv_heads=4, n_layers=2,
+                              use_pallas_gemm=True)
+
+    tuned_rt = AdsalaRuntime()
+    keys = harvest_decision_keys(cfg, batch_size=B, seq_len=S,
+                                 programs=("prefill", "decode"))
+    db = keys[0][2]
+    sub = install_subroutine(
+        "gemm", knob_space_for("gemm", sizes=(128, 256, 512)),
+        lambda dims, knob: oracle_time("gemm", dims, knob, dtype_bytes=db),
+        n_samples=40, dim_lo=16, dim_hi=1024, dtype_bytes=db,
+        backend="pallas", tune_trials=2)
+    tuned_rt.register(sub)
+    default_rt = AdsalaRuntime()       # no artifacts → default knob path
+
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch_for(cfg, B, S)
+    ucfg = dataclasses.replace(cfg, use_pallas_gemm=False)
+
+    def bench_pair(c, rt):
+        pre = jax.jit(lambda p, b, ch: tf.prefill(p, b, ch, c, runtime=rt))
+        dec = jax.jit(lambda p, t, ch: tf.decode_step(p, t, ch, c,
+                                                      runtime=rt))
+        caches0 = tf.init_decode_state(c, B, S + 8)
+        logits, caches = pre(params, batch, caches0)
+        jax.block_until_ready(logits)
+        pre_s = _median_wall(
+            lambda: jax.block_until_ready(pre(params, batch, caches0)[0]))
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        dec_s = _median_wall(
+            lambda: jax.block_until_ready(dec(params, tok, caches)[0]),
+            repeats=5)
+        return pre_s, dec_s
+
+    rows = {}
+    for name, c, rt in (("default_knobs", cfg, default_rt),
+                        ("tuned_knobs", cfg, tuned_rt),
+                        ("unrouted", ucfg, None)):
+        pre_s, dec_s = bench_pair(c, rt)
+        rows[name] = {"prefill_tokens_per_s": round(B * S / pre_s, 1),
+                      "decode_ms_per_step": round(dec_s * 1e3, 2)}
+        print(f"[model_bench] {name}: {rows[name]}")
+    speed = {
+        "prefill": round(rows["tuned_knobs"]["prefill_tokens_per_s"] /
+                         rows["default_knobs"]["prefill_tokens_per_s"], 3),
+        "decode": round(rows["default_knobs"]["decode_ms_per_step"] /
+                        max(rows["tuned_knobs"]["decode_ms_per_step"], 1e-9),
+                        3)}
+    print(f"[model_bench] tuned_over_default: {speed}")
+    return {"dims": {"batch": B, "seq": S, "d_model": cfg.d_model,
+                     "d_ff": cfg.d_ff, "n_layers": cfg.n_layers},
+            "paths": rows, "tuned_over_default": speed,
+            "low_core": (os.cpu_count() or 1) < 3}
+
+
+# ---------------------------------------------------------------------------
+
+def build_payload(quick=False, smoke=False) -> dict:
+    parity = parity_metrics()
+    prewarm = prewarm_metrics()
+    payload = {
+        "host": {"platform": platform.platform(),
+                 "python": platform.python_version(),
+                 "cpus": os.cpu_count()},
+        "parity": parity,
+        "prewarm": prewarm,
+        # what bench_diff gates (deterministic: exact bools/counts)
+        "smoke_baseline": {
+            "routed_bit_identical": parity["routed_bit_identical"],
+            "prewarm_model_evals": prewarm["prewarm_model_evals"],
+            "cold_model_evals": prewarm["cold_model_evals"],
+            "harvested_keys": prewarm["harvested_keys"]},
+    }
+    if not smoke:
+        payload["serving_wall"] = timing_metrics(quick=quick)
+    return payload
+
+
+def record_entry(entry_id: str, payload: dict, path: Path = BENCH_PATH):
+    try:                                 # package mode (benchmarks.run)
+        from .common import record_trajectory_entry
+    except ImportError:                  # script mode (benchmarks/ on path)
+        from common import record_trajectory_entry
+    record_trajectory_entry(path, "model", entry_id, payload)
+    print(f"[model_bench] recorded entry {entry_id!r} -> {path}")
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="CI mode: parity + prewarm only (deterministic), "
+                        "no wall-clock section")
+    p.add_argument("--quick", action="store_true",
+                   help="shorter prefill for the wall-clock section")
+    p.add_argument("--json", type=Path, default=None,
+                   help="write metrics JSON here (bench_diff --model-fresh)")
+    p.add_argument("--record", default=None, metavar="ENTRY",
+                   help="append/replace this per-PR entry in "
+                        "BENCH_model.json")
+    args = p.parse_args(argv)
+
+    payload = build_payload(quick=args.quick, smoke=args.smoke)
+    base = payload["smoke_baseline"]
+    if not base["routed_bit_identical"]:
+        raise SystemExit("[model_bench] routed forward is NOT bit-identical")
+    if base["prewarm_model_evals"] != 0:
+        raise SystemExit(f"[model_bench] prewarmed serving paid "
+                         f"{base['prewarm_model_evals']} model evals")
+    if args.json is not None:
+        args.json.write_text(json.dumps(payload, indent=1))
+        print(f"[model_bench] metrics -> {args.json}")
+    if args.record is not None:
+        record_entry(args.record, payload)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,10 +22,18 @@ Three trajectories:
     (host-side pad/slice op counts must be exactly zero; the tri_packed
     grid-slot saving must not shrink), so this gate is immune to timing
     jitter.
+  * ``BENCH_model.json`` (gated when ``--model-fresh`` is given): the
+    ADSALA-dispatched model-serving contract — routed forward/prefill/
+    decode must be bit-identical to the plain matmul path, prewarmed
+    serving must pay exactly zero runtime model evaluations, and the
+    harvested decision-key count must match the committed baseline (a
+    mismatch means the model's GEMM call-site set changed — re-record).
+    All deterministic, immune to timing jitter.
 
     PYTHONPATH=src python scripts/bench_diff.py
     PYTHONPATH=src python scripts/bench_diff.py --fresh /tmp/smoke.json \
-        --serving-fresh /tmp/serving.json --kernels-fresh /tmp/kernels.json
+        --serving-fresh /tmp/serving.json --kernels-fresh /tmp/kernels.json \
+        --model-fresh /tmp/model.json
 """
 
 from __future__ import annotations
@@ -42,6 +50,7 @@ sys.path.insert(0, str(REPO_ROOT / "benchmarks"))
 BENCH_PATH = REPO_ROOT / "BENCH_decision.json"
 SERVING_PATH = REPO_ROOT / "BENCH_serving.json"
 KERNELS_PATH = REPO_ROOT / "BENCH_kernels.json"
+MODEL_PATH = REPO_ROOT / "BENCH_model.json"
 
 #: summary-level ratios under the standard (--tolerance) gate
 GATED_SUMMARY = ("cold_median_speedup", "batch_speedup")
@@ -59,7 +68,8 @@ HIT_FLOOR = 3.0
 #: how to (re)generate each trajectory's committed baseline
 _RECORDERS = {"decision": "benchmarks/decision_bench.py (full mode)",
               "serving": "benchmarks/serve_bench.py --record <entry>",
-              "kernels": "benchmarks/kernel_bench.py --record <entry>"}
+              "kernels": "benchmarks/kernel_bench.py --record <entry>",
+              "model": "benchmarks/model_bench.py --record <entry>"}
 
 
 def committed_baseline(path: Path) -> tuple[str, dict]:
@@ -149,6 +159,48 @@ def gate_kernels(fresh_json: Path, bench: Path, tolerance: float,
                             f"(vs {entry_id})")
 
 
+def gate_model(fresh_json: Path, bench: Path, failures: list) -> None:
+    """ADSALA-dispatched serving contract: routed execution must be
+    bit-identical, prewarmed serving must pay zero runtime model evals, and
+    the harvested key set must match the committed baseline.  All
+    deterministic — any drift is a code change, not noise."""
+    entry_id, base = committed_baseline(bench)
+    data = json.loads(fresh_json.read_text())
+    fresh = data.get("smoke_baseline") or data["summary"]
+
+    bit = fresh.get("routed_bit_identical")
+    print(f"[bench_diff] {'ok ' if bit else 'REG'} "
+          f"model.routed_bit_identical: {bit} (must be True)")
+    if not bit:
+        failures.append("model.routed_bit_identical")
+
+    evals = fresh.get("prewarm_model_evals")
+    ok = evals == 0
+    print(f"[bench_diff] {'ok ' if ok else 'REG'} "
+          f"model.prewarm_model_evals: {evals} (must be 0)")
+    if not ok:
+        failures.append("model.prewarm_model_evals")
+
+    cold = fresh.get("cold_model_evals")
+    if cold is not None:
+        ok = cold > 0
+        print(f"[bench_diff] {'ok ' if ok else 'REG'} "
+              f"model.cold_model_evals: {cold} (must be >0 — otherwise the "
+              f"prewarm gate is vacuous)")
+        if not ok:
+            failures.append("model.cold_model_evals")
+
+    committed = base.get("harvested_keys")
+    measured = fresh.get("harvested_keys")
+    if committed is not None and measured is not None:
+        ok = measured == committed
+        print(f"[bench_diff] {'ok ' if ok else 'REG'} model.harvested_keys: "
+              f"committed {committed}, fresh {measured} (exact; a change "
+              f"means the GEMM call-site set moved — re-record)")
+        if not ok:
+            failures.append(f"model.harvested_keys (vs {entry_id})")
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--bench", type=Path, default=BENCH_PATH,
@@ -167,6 +219,11 @@ def main(argv=None) -> int:
                         "PATH); gates BENCH_kernels.json when given")
     p.add_argument("--kernels-bench", type=Path, default=KERNELS_PATH,
                    help="committed kernel trajectory file")
+    p.add_argument("--model-fresh", type=Path, default=None,
+                   help="fresh model-serving metrics (model_bench --smoke "
+                        "--json PATH); gates BENCH_model.json when given")
+    p.add_argument("--model-bench", type=Path, default=MODEL_PATH,
+                   help="committed model-serving trajectory file")
     p.add_argument("--tolerance", type=float, default=0.25,
                    help="allowed fractional regression per metric")
     args = p.parse_args(argv)
@@ -204,6 +261,8 @@ def main(argv=None) -> int:
     if args.kernels_fresh is not None:
         gate_kernels(args.kernels_fresh, args.kernels_bench,
                      args.tolerance, failures)
+    if args.model_fresh is not None:
+        gate_model(args.model_fresh, args.model_bench, failures)
 
     if failures:
         print(f"[bench_diff] FAILED vs entry {entry_id!r}: "

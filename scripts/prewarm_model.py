@@ -1,0 +1,163 @@
+#!/usr/bin/env python
+"""Ahead-of-time install + decision prewarm for ADSALA-dispatched serving.
+
+Offline half of the "first request pays zero model evaluations" contract:
+
+  1. **harvest** — abstractly trace the routed model's forward / prefill /
+     decode_step programs (:func:`repro.roofline.harvest.
+     harvest_decision_keys`) for the requested (batch, seq) points; every
+     GEMM decision-cache key the server will ever ask for falls out, with
+     zero FLOPs executed.
+  2. **prune** — score the backend's full knob space with the analytic v5e
+     cost oracle at each harvested call site and drop provably-dominated
+     candidates (:func:`repro.roofline.costing.prune_dominated_candidates`)
+     before paying for calibration.
+  3. **install** — run the standard ADSALA install for ``gemm`` over the
+     pruned space and persist the artifact through a
+     :class:`~repro.core.registry.ModelRegistry`.  ``--timer oracle``
+     (default) calibrates against the deterministic cost oracle — fast and
+     machine-independent; ``--timer wallclock`` measures the real backend.
+  4. **prewarm** — batch-resolve every harvested key through
+     ``select_many`` and persist the filled LRU via
+     ``save_decision_cache``; a serving process that ``load_into`` +
+     ``load_decision_cache``-s this registry then serves its first request
+     entirely from cache hits.
+
+The script verifies step 4 by rebuilding a fresh runtime from the persisted
+registry, replaying the harvested keys, and asserting **zero** model
+evaluations; it exits nonzero if any slip through.
+
+    PYTHONPATH=src python scripts/prewarm_model.py --arch qwen1.5-4b \\
+        --registry /tmp/adsala_models --batch 1,8 --seq 128
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def _parse_ints(text: str) -> tuple[int, ...]:
+    return tuple(int(v) for v in text.split(",") if v)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="qwen1.5-4b",
+                   help="architecture id (repro.configs registry)")
+    p.add_argument("--smoke-config", action="store_true",
+                   help="use the reduced smoke config (CI/CPU hosts)")
+    p.add_argument("--registry", required=True,
+                   help="artifact directory to install into")
+    p.add_argument("--batch", default="1,8",
+                   help="comma list of serving batch sizes to harvest")
+    p.add_argument("--seq", default="128",
+                   help="comma list of prefill lengths to harvest")
+    p.add_argument("--backend", default="pallas")
+    p.add_argument("--timer", choices=("oracle", "wallclock"),
+                   default="oracle",
+                   help="install calibration timer (oracle = analytic v5e "
+                        "cost model, deterministic; wallclock = measure)")
+    p.add_argument("--sizes", default="128,256",
+                   help="knob-space block edges before pruning")
+    p.add_argument("--n-samples", type=int, default=60,
+                   help="install-time Halton samples")
+    p.add_argument("--tune-trials", type=int, default=2)
+    p.add_argument("--prune-slack", type=float, default=0.15,
+                   help="oracle-dominance band; <0 disables pruning")
+    args = p.parse_args(argv)
+
+    import numpy as np
+
+    from repro.backends import resolve_backend
+    from repro.configs import get_config, get_smoke_config
+    from repro.core.oracle import oracle_time
+    from repro.core.registry import ModelRegistry
+    from repro.core.runtime import AdsalaRuntime
+    from repro.core.tuner import install_subroutine
+    from repro.roofline.costing import prune_dominated_candidates
+    from repro.roofline.harvest import harvest_decision_keys
+
+    cfg = (get_smoke_config if args.smoke_config else get_config)(args.arch)
+    backend = resolve_backend(args.backend)
+    registry = ModelRegistry(args.registry)
+    runtime = AdsalaRuntime()
+
+    # 1. harvest --------------------------------------------------------------
+    t0 = time.perf_counter()
+    keys: list[tuple] = []
+    seen: set[tuple] = set()
+    for B in _parse_ints(args.batch):
+        for S in _parse_ints(args.seq):
+            for key in harvest_decision_keys(cfg, batch_size=B, seq_len=S):
+                if key not in seen:
+                    seen.add(key)
+                    keys.append(key)
+    ops = sorted({k[1] for k in keys})
+    dtype_bytes = sorted({k[2] for k in keys})
+    print(f"[prewarm] harvested {len(keys)} decision keys "
+          f"(ops={ops}, dtype_bytes={dtype_bytes}) "
+          f"in {time.perf_counter() - t0:.2f}s")
+    if not keys:
+        print("[prewarm] nothing to install (model routes no GEMMs?)")
+        return 1
+
+    # 2+3. prune + install, one artifact per (op, dtype_bytes) ---------------
+    for op in ops:
+        for db in dtype_bytes:
+            dims_list = [k[3] for k in keys
+                         if k[1] == op and k[2] == db]
+            if not dims_list:
+                continue
+            space = backend.knob_space(op, sizes=_parse_ints(args.sizes))
+            full = len(space)
+            if args.prune_slack >= 0:
+                space = prune_dominated_candidates(
+                    op, space, dims_list, dtype_bytes=db,
+                    slack=args.prune_slack)
+            if args.timer == "oracle":
+                timer = lambda dims, knob, _op=op, _db=db: oracle_time(
+                    _op, dims, knob, dtype_bytes=_db)
+            else:
+                timer = backend.timer_fn(op, np.dtype(f"float{db * 8}"))
+            lo = max(16, min(min(d) for d in dims_list))
+            hi = max(max(d) for d in dims_list)
+            sub = install_subroutine(
+                op, space, timer, n_samples=args.n_samples,
+                dim_lo=lo, dim_hi=max(hi, lo + 1), dtype_bytes=db,
+                backend=backend.name, tune_trials=args.tune_trials)
+            registry.save(sub)
+            runtime.register(sub)
+            print(f"[prewarm] installed {backend.name}/{op} b{db}: "
+                  f"model={sub.model_name}, knobs {full}->{len(space)} "
+                  f"(oracle-pruned), dims [{lo}, {hi}]")
+
+    # 4. prewarm the decision cache ------------------------------------------
+    requests = [(op, dims, db, be) for (be, op, db, dims) in keys]
+    runtime.select_many(requests, record_hits=False)
+    path = registry.save_decision_cache(runtime)
+    evals = runtime.stats.for_backend(backend.name).model_evals
+    print(f"[prewarm] cached {len(requests)} decisions "
+          f"({evals} model evals) -> {path}")
+
+    # verify: a fresh process hydrated from the registry replays every
+    # harvested key as a cache hit — zero runtime model evaluations
+    fresh = AdsalaRuntime()
+    registry.load_into(fresh, backend=backend.name)
+    registry.load_decision_cache(fresh)
+    for op, dims, db, be in requests:
+        fresh.select_or_default(op, dims, db,
+                                backend.default_knob(op), backend=be)
+    cold_evals = fresh.stats.for_backend(backend.name).model_evals
+    print(f"[prewarm] replay from persisted cache: {cold_evals} model "
+          f"evals across {len(requests)} keys "
+          f"({'OK' if cold_evals == 0 else 'FAIL'})")
+    return 0 if cold_evals == 0 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -97,12 +97,18 @@ class Backend(abc.ABC):
         serving layer's bucket-execution primitive (all requests in a bucket
         share dims/dtype, so one knob covers the whole stack).
 
+        Operands of one-lower rank than the stack are *shared* across it
+        (a 2-D weight against batched activations) and pass through whole.
+
         The base implementation unstacks, loops :meth:`execute`, and
         restacks; backends that can execute a stack natively (vmap, batched
         BLAS, strided GEMM) override this with the one-call version.
         """
         batch = int(operands[0].shape[0])
-        outs = [self.execute(op, tuple(x[i] for x in operands), knob, **kw)
+        rank = operands[0].ndim
+        outs = [self.execute(op,
+                             tuple(x[i] if getattr(x, "ndim", rank) == rank
+                                   else x for x in operands), knob, **kw)
                 for i in range(batch)]
         return np.stack([np.asarray(o) for o in outs])
 

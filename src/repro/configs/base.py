@@ -79,7 +79,9 @@ class ModelConfig:
     attn_q_chunk: int = 1024          # blockwise-attention q tile
     attn_k_chunk: int = 1024          # blockwise-attention kv tile
     causal_skip: bool = False         # skip fully-masked kv blocks (§Perf)
-    use_pallas_gemm: bool = False     # route projections through kernels.ops
+    use_pallas_gemm: bool = False     # route dense matmuls through run_op
+    gemm_backend: str = "pallas"      # run_op backend key for routed matmuls
+    gemm_interpret: bool | None = None  # None → backend auto (TPU: compiled)
 
     # ------------------------------------------------------------------------
     def hd(self) -> int:

@@ -8,6 +8,12 @@ the grid/out_shape are prefixed with the width, and the new dimension is
 their ``off`` parameter (grid-axis indices shift by one) and read/write
 ``ref[0]`` instead of ``ref[...]``.
 
+Operands *shared* across the stack (a 2-D weight against a batched
+activation — the model-serving linear) keep their original index map and
+block via the per-operand ``broadcast`` flags: every batch grid step reads
+the same weight tile, so the stack executes without materialising a
+broadcast copy of the weight.
+
 One implementation — gemm, symm, syrk/syr2k, and trmm all apply the same
 transformation, and a divergent copy would compile but mis-index.
 """
@@ -18,15 +24,22 @@ __all__ = ["with_batch_axis"]
 
 
 def with_batch_axis(batch, grid, in_maps, in_blocks, out_map, out_block,
-                    semantics, out_shape):
+                    semantics, out_shape, broadcast=None):
     """Prefix a leading batch grid dimension; identity when ``batch`` is
-    None.  Returns the transformed ``(grid, in_maps, in_blocks, out_map,
-    out_block, semantics, out_shape)`` tuple."""
+    None.  ``broadcast`` optionally flags, per input, operands shared
+    (unbatched) across the stack — their maps/blocks pass through
+    untouched.  Returns the transformed ``(grid, in_maps, in_blocks,
+    out_map, out_block, semantics, out_shape)`` tuple."""
     if batch is None:
         return (grid, in_maps, in_blocks, out_map, out_block, semantics,
                 out_shape)
-    in_maps = [lambda bt, *gi, f=f: (bt,) + tuple(f(*gi)) for f in in_maps]
-    in_blocks = [(1,) + tuple(blk) for blk in in_blocks]
+    if broadcast is None:
+        broadcast = (False,) * len(in_maps)
+    in_maps = [(lambda bt, *gi, f=f: tuple(f(*gi))) if bc
+               else (lambda bt, *gi, f=f: (bt,) + tuple(f(*gi)))
+               for f, bc in zip(in_maps, broadcast)]
+    in_blocks = [tuple(blk) if bc else (1,) + tuple(blk)
+                 for blk, bc in zip(in_blocks, broadcast)]
     inner_out = out_map
 
     def batched_out(bt, *gi):

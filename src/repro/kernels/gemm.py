@@ -52,9 +52,11 @@ def mask_rows(x, block: int, step, dim: int):
     return jnp.where(ids < dim, x, jnp.zeros_like(x))
 
 
-def _gemm_kernel(*refs, alpha, beta, k, bk, has_c, off):
+def _gemm_kernel(*refs, alpha, beta, k, bk, has_c, off, shared_b):
     """``refs`` = (a, b[, c], o, acc); ``off`` = 1 when a leading batch grid
-    dim is present (refs then carry a leading length-1 block axis)."""
+    dim is present (refs then carry a leading length-1 block axis).
+    ``shared_b`` — B is a single 2-D weight shared across the stack (its ref
+    never gained the batch block axis)."""
     if has_c:
         a_ref, b_ref, c_ref, o_ref, acc_ref = refs
     else:
@@ -66,7 +68,7 @@ def _gemm_kernel(*refs, alpha, beta, k, bk, has_c, off):
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     a = a_ref[0] if off else a_ref[...]
-    b = b_ref[0] if off else b_ref[...]
+    b = b_ref[0] if (off and not shared_b) else b_ref[...]
     if k % bk:
         # ragged contraction tail: both operands masked (OOB reads are
         # undefined, and 0 * garbage is still garbage when garbage is NaN)
@@ -92,12 +94,16 @@ def gemm_pallas(a, b, c=None, *, bm: int = 128, bk: int = 128, bn: int = 128,
                 alpha: float = 1.0, beta: float = 0.0,
                 interpret: bool = False):
     """alpha*A@B + beta*C for arbitrary (ragged) shapes; a leading batch
-    axis executes as one batched grid."""
+    axis executes as one batched grid.  A 2-D B against a batched A is
+    treated as a weight shared across the stack (the model-serving linear:
+    ``(B, S, d) @ (d, n)`` with no host reshape)."""
     *lead, m, k = a.shape
     k2, n = b.shape[-2:]
     assert k == k2, (a.shape, b.shape)
-    assert len(lead) <= 1 and b.shape[:-2] == tuple(lead)
+    assert len(lead) <= 1 and b.shape[:-2] in (tuple(lead), ()), \
+        (a.shape, b.shape)
     batch = lead[0] if lead else None
+    shared_b = batch is not None and b.ndim == 2
     has_c = c is not None and beta != 0.0
     off = 1 if batch is not None else 0
 
@@ -108,14 +114,15 @@ def gemm_pallas(a, b, c=None, *, bm: int = 128, bk: int = 128, bn: int = 128,
              lambda i, j, l: (i, j)],
             [(bm, bk), (bk, bn), (bm, bn)],
             lambda i, j, l: (i, j), (bm, bn),
-            ("parallel", "parallel", "arbitrary"), (m, n))
+            ("parallel", "parallel", "arbitrary"), (m, n),
+            broadcast=(False, shared_b, False))
 
     operands = [a, b] + ([c] if has_c else [])
     in_specs = [pl.BlockSpec(blk, f)
                 for blk, f in zip(in_blocks, in_maps)][: len(operands)]
     return pl.pallas_call(
         functools.partial(_gemm_kernel, alpha=alpha, beta=beta, k=k, bk=bk,
-                          has_c=has_c, off=off),
+                          has_c=has_c, off=off, shared_b=shared_b),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec(out_block, out_map),

@@ -372,8 +372,10 @@ def run_op(op: str, operands: tuple, *, backend: str = "pallas",
     Operands carrying a leading batch axis (``(B, m, k)`` instead of
     ``(m, k)``) execute as one stacked call via ``Backend.execute_stacked``
     — all items share dims/dtype, so a single knob decision covers the whole
-    stack.  ``stacked`` forces the interpretation when auto-detection by
-    rank is ambiguous.
+    stack.  Trailing operands of one-lower rank (a shared 2-D weight against
+    batched activations — the model-serving linear) broadcast across the
+    stack without a host reshape or copy.  ``stacked`` forces the
+    interpretation when auto-detection by rank is ambiguous.
     """
     be = _backend_resolver()(backend)
     if stacked is None:

@@ -19,9 +19,10 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from .sharding import ShardingRules, DEFAULT_RULES, constrain
 
-__all__ = ["Ctx", "init_linear", "linear", "init_norm", "rmsnorm",
-           "init_embedding", "embed", "rope", "init_attention", "attention",
-           "init_mlp", "mlp", "cross_entropy", "flash_attention"]
+__all__ = ["Ctx", "init_linear", "linear", "routed_matmul", "init_norm",
+           "rmsnorm", "init_embedding", "embed", "rope", "init_attention",
+           "attention", "init_mlp", "mlp", "cross_entropy",
+           "flash_attention"]
 
 
 @dataclasses.dataclass
@@ -29,6 +30,7 @@ class Ctx:
     cfg: ModelConfig
     mesh: object = None               # jax.sharding.Mesh | None
     rules: ShardingRules = DEFAULT_RULES
+    runtime: object = None            # AdsalaRuntime | None (None → global)
 
     def cast(self, x):
         return x.astype(self.cfg.compute_dtype)
@@ -37,6 +39,38 @@ class Ctx:
         if self.mesh is None:
             return x
         return constrain(x, self.rules, self.mesh, *names)
+
+    def routes_gemm(self, x) -> bool:
+        """Whether a dense matmul on ``x`` goes through the tuned runtime:
+        opt-in via config, single-host only (the sharded path keeps jnp
+        matmuls so GSPMD can partition them)."""
+        return (self.cfg.use_pallas_gemm and self.mesh is None
+                and x.ndim >= 2)
+
+
+def routed_matmul(x, w, ctx: Ctx):
+    """``x @ w`` dispatched through :func:`repro.kernels.ops.run_op` — knob
+    selection, decision cache, and backend keying all come from the ADSALA
+    runtime carried on ``ctx`` (``None`` → the process-global runtime).
+
+    Activations keep their leading batch axis: ``(B, S, d) @ (d, n)``
+    executes as one stacked call whose 2-D weight broadcasts across the
+    stack (no host reshape in the hot decode loop).  The interpret/compiled
+    kernel mode comes from ``cfg.gemm_interpret`` (``None`` → the backend
+    auto-detects the host).  Falls back to plain ``x @ w`` when the config
+    does not route.
+    """
+    if not ctx.routes_gemm(x) or w.ndim != 2:
+        return x @ w
+    from repro.kernels import ops as kops
+    kw = {}
+    if ctx.cfg.gemm_interpret is not None:
+        kw["interpret"] = ctx.cfg.gemm_interpret
+    lead = x.shape[:-2]
+    x3 = x.reshape(-1, *x.shape[-2:]) if len(lead) > 1 else x
+    y = kops.run_op("gemm", (x3, w), backend=ctx.cfg.gemm_backend,
+                    runtime=ctx.runtime, stacked=x3.ndim == 3, **kw)
+    return y.reshape(*lead, *y.shape[-2:]) if len(lead) > 1 else y
 
 
 def _init(key, shape, scale, dtype):
@@ -58,13 +92,7 @@ def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
 
 def linear(p: dict, x, ctx: Ctx, *, out_logical: str | None = None):
     w = ctx.cast(p["w"])
-    if ctx.cfg.use_pallas_gemm and ctx.mesh is None and x.ndim >= 2:
-        from repro.kernels import ops as kops
-        lead = x.shape[:-1]
-        x2 = x.reshape(-1, x.shape[-1])
-        y = kops.gemm(x2, w, interpret=True).reshape(*lead, w.shape[-1])
-    else:
-        y = x @ w
+    y = routed_matmul(x, w, ctx)
     if "b" in p:
         y = y + ctx.cast(p["b"])
     if out_logical is not None:

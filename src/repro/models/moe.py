@@ -41,6 +41,24 @@ def init_moe(key, cfg: ModelConfig) -> dict:
     return p
 
 
+def _expert_matmul(t, w, ctx: Ctx):
+    """Per-expert matmul ``einsum("becd,edf->becf", t, w)`` with optional
+    ADSALA dispatch: when the config routes GEMMs, the (B,E,C,·) slab is
+    folded to an expert-major stack (E, B·C, ·) and executed as one stacked
+    ``run_op("gemm", ...)`` call — one knob decision covers all experts."""
+    if not ctx.routes_gemm(t):
+        return jnp.einsum("becd,edf->becf", t, w)
+    from repro.kernels import ops as kops
+    B, E, C, D = t.shape
+    kw = {}
+    if ctx.cfg.gemm_interpret is not None:
+        kw["interpret"] = ctx.cfg.gemm_interpret
+    t3 = t.swapaxes(0, 1).reshape(E, B * C, D)
+    y = kops.run_op("gemm", (t3, w), backend=ctx.cfg.gemm_backend,
+                    runtime=ctx.runtime, stacked=True, **kw)
+    return y.reshape(E, B, C, -1).swapaxes(0, 1)
+
+
 def _positions_in_expert(e_flat: jax.Array) -> jax.Array:
     """For each slot (sorted-stable by expert id), its rank within its
     expert.  e_flat: (G, S*K) int32 → (G, S*K) int32."""
@@ -100,9 +118,9 @@ def moe_ffn(p: dict, x, ctx: Ctx):
 
     # --- expert FFN (EP over 'model') ----------------------------------------
     wg, wu, wd = (ctx.cast(p["wg"]), ctx.cast(p["wu"]), ctx.cast(p["wd"]))
-    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, wg)) * \
-        jnp.einsum("becd,edf->becf", buf, wu)
-    y = jnp.einsum("becf,efd->becd", h, wd)
+    h = jax.nn.silu(_expert_matmul(buf, wg, ctx)) * \
+        _expert_matmul(buf, wu, ctx)
+    y = _expert_matmul(h, wd, ctx)
     y = ctx.cons(y, "batch", "experts", "expert_cap", None)
 
     # --- combine (gather) ------------------------------------------------------

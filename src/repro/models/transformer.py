@@ -29,7 +29,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from .layers import (Ctx, attention, cross_entropy, embed, init_attention,
                      init_embedding, init_mlp, init_norm, linear, mlp,
-                     rmsnorm)
+                     rmsnorm, routed_matmul)
 from .mamba2 import init_mamba2, init_mamba2_state, mamba2_mixer
 from .mla import init_mla, init_mla_cache, mla_attention
 from .moe import init_moe, moe_ffn
@@ -125,7 +125,7 @@ def param_count(params) -> int:
 
 def _shared_attn_block(shared_p, in_proj, x, x0, ctx, cache):
     cat = jnp.concatenate([x, x0], axis=-1)
-    u = cat @ ctx.cast(in_proj["w"])
+    u = routed_matmul(cat, ctx.cast(in_proj["w"]), ctx)
     a, new_cache = attention(shared_p["attn"], rmsnorm(shared_p["ln1"], u),
                              ctx, cache=cache)
     u = u + a
@@ -307,8 +307,8 @@ def _embed_inputs(params, batch, ctx: Ctx):
     cfg = ctx.cfg
     x = embed(params["embed"], batch["tokens"], ctx)
     if cfg.family == "vlm":
-        vis = batch["vision"].astype(x.dtype) @ ctx.cast(
-            params["vision_proj"]["w"])
+        vis = routed_matmul(batch["vision"].astype(x.dtype),
+                            ctx.cast(params["vision_proj"]["w"]), ctx)
         x = jnp.concatenate([vis, x], axis=1)
         x = ctx.cons(x, "batch", "seq", "embed")
     if cfg.family == "audio":
@@ -322,14 +322,17 @@ def _logits(params, x, ctx: Ctx):
         w = ctx.cast(params["lm_head"]["w"])
     else:
         w = ctx.cast(params["embed"]["table"]).T
-    logits = x @ w
+    logits = routed_matmul(x, w, ctx)
     return ctx.cons(logits, "batch", None, "vocab")
 
 
-def forward(params, batch, cfg: ModelConfig, *, mesh=None, rules=None):
-    """batch: {tokens (B,S); [frames|vision]} → (logits, aux)."""
+def forward(params, batch, cfg: ModelConfig, *, mesh=None, rules=None,
+            runtime=None):
+    """batch: {tokens (B,S); [frames|vision]} → (logits, aux).
+    ``runtime`` — AdsalaRuntime serving the routed matmuls' knob decisions
+    when the config routes (None → the process-global runtime)."""
     from .sharding import DEFAULT_RULES
-    ctx = Ctx(cfg, mesh, rules or DEFAULT_RULES)
+    ctx = Ctx(cfg, mesh, rules or DEFAULT_RULES, runtime)
     x = _embed_inputs(params, batch, ctx)
     enc_out = (_run_encoder(params, batch["frames"], ctx)
                if cfg.family == "audio" else None)
@@ -338,10 +341,10 @@ def forward(params, batch, cfg: ModelConfig, *, mesh=None, rules=None):
 
 
 def loss_fn(params, batch, cfg: ModelConfig, *, mesh=None, rules=None,
-            moe_aux_coef: float = 0.01):
+            runtime=None, moe_aux_coef: float = 0.01):
     from .sharding import DEFAULT_RULES
     from .layers import chunked_cross_entropy
-    ctx = Ctx(cfg, mesh, rules or DEFAULT_RULES)
+    ctx = Ctx(cfg, mesh, rules or DEFAULT_RULES, runtime)
     x = _embed_inputs(params, batch, ctx)
     enc_out = (_run_encoder(params, batch["frames"], ctx)
                if cfg.family == "audio" else None)
@@ -400,11 +403,11 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def prefill(params, batch, caches, cfg: ModelConfig, *, mesh=None,
-            rules=None):
+            rules=None, runtime=None):
     """Run the prompt through the model filling caches.
     Returns (last-token logits, new caches)."""
     from .sharding import DEFAULT_RULES
-    ctx = Ctx(cfg, mesh, rules or DEFAULT_RULES)
+    ctx = Ctx(cfg, mesh, rules or DEFAULT_RULES, runtime)
     x = _embed_inputs(params, batch, ctx)
     enc_out = (_run_encoder(params, batch["frames"], ctx)
                if cfg.family == "audio" else None)
@@ -414,11 +417,11 @@ def prefill(params, batch, caches, cfg: ModelConfig, *, mesh=None,
 
 
 def decode_step(params, token, caches, cfg: ModelConfig, *, mesh=None,
-                rules=None, enc_out=None, x0=None, pos=0):
+                rules=None, runtime=None, enc_out=None, x0=None, pos=0):
     """One-token step. token: (B, 1) int32 → (logits (B,1,V), new caches).
     ``pos`` — absolute position (whisper sinusoidal embedding offset)."""
     from .sharding import DEFAULT_RULES
-    ctx = Ctx(cfg, mesh, rules or DEFAULT_RULES)
+    ctx = Ctx(cfg, mesh, rules or DEFAULT_RULES, runtime)
     x = embed(params["embed"], token, ctx)
     if cfg.family == "audio" and enc_out is None:
         raise ValueError("whisper decode needs enc_out from prefill")

@@ -1,5 +1,8 @@
-"""Roofline analysis: HLO collective parsing + three-term roofline."""
+"""Roofline analysis: HLO collective parsing + three-term roofline,
+plus ahead-of-time BLAS3 call-site harvest for offline prewarm."""
 from .analysis import HW, RooflineReport, model_flops, roofline
+from .harvest import dot_call_sites, harvest_decision_keys
 from .hlo_parse import COLLECTIVE_KINDS, parse_collectives, wire_bytes
 __all__ = ["HW", "RooflineReport", "model_flops", "roofline",
-           "COLLECTIVE_KINDS", "parse_collectives", "wire_bytes"]
+           "COLLECTIVE_KINDS", "parse_collectives", "wire_bytes",
+           "harvest_decision_keys", "dot_call_sites"]

@@ -45,7 +45,8 @@ from repro.models.layers import Ctx
 from repro.models.sharding import ShardingRules, logical_spec
 from .hlo_parse import parse_collectives
 
-__all__ = ["cell_units", "unit_costs", "corrected_costs", "Unit"]
+__all__ = ["cell_units", "unit_costs", "corrected_costs", "Unit",
+           "prune_dominated_candidates"]
 
 _COST_KEYS = ("flops", "bytes", "coll")
 
@@ -298,6 +299,39 @@ def unit_costs(cfg: ModelConfig, unit: Unit, shape: Shape, mesh,
             total[k] = once[k] + (unit.trips - unit.n_instances) * \
                 max(marginal, 0.0)
     return {"once": once, "total": total}
+
+
+def prune_dominated_candidates(op: str, space, dims_list,
+                               *, dtype_bytes: int = 4,
+                               slack: float = 0.15):
+    """Drop knob candidates the analytic roofline proves dominated at every
+    harvested call site.
+
+    For each dims in ``dims_list`` (e.g. the output of
+    ``roofline.harvest.harvest_decision_keys``), score every candidate with
+    the deterministic v5e cost oracle and keep the union of all candidates
+    within ``(1 + slack)`` of that dims' best.  A candidate outside the band
+    at *every* site cannot win under any model whose error is below the
+    slack, so install-time calibration need not sample it — the dominant
+    cost of ahead-of-time tuning.  Returns a new
+    :class:`~repro.core.knobs.KnobSpace` preserving the parallelism
+    definition (never empty: each site contributes at least its argmin).
+    """
+    from repro.core.knobs import KnobSpace
+    from repro.core.oracle import oracle_time
+
+    dims_list = [tuple(d) for d in dims_list]
+    if not dims_list:
+        return space
+    keep: set[int] = set()
+    for dims in dims_list:
+        times = np.array([oracle_time(op, dims, c, dtype_bytes=dtype_bytes)
+                          for c in space.candidates])
+        band = times.min() * (1.0 + slack)
+        keep.update(int(i) for i in np.flatnonzero(times <= band))
+    cands = [space.candidates[i].dict for i in sorted(keep)]
+    return KnobSpace(space.name, cands,
+                     parallelism_fn=space._parallelism_fn)
 
 
 def corrected_costs(prod: dict, unit_records: list[dict]) -> dict:

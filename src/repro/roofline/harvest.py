@@ -1,0 +1,145 @@
+"""Ahead-of-time BLAS3 call-site harvest from jitted model programs.
+
+The routed model (``use_pallas_gemm=True``) resolves every GEMM knob at jit
+*trace* time through ``AdsalaRuntime.select_or_default``.  That makes the
+complete set of decision-cache keys a *static* property of the traced
+program — so it can be harvested offline, with zero FLOPs, by tracing the
+model under :func:`jax.eval_shape` with a recording runtime:
+
+  * :func:`harvest_decision_keys` — abstractly evaluate ``forward``,
+    ``prefill`` and ``decode_step`` for a config and return every distinct
+    ``(backend, op, dtype_bytes, dims)`` key the routed matmuls will ask
+    for.  ``scripts/prewarm_model.py`` feeds these through
+    ``select_many`` + ``ModelRegistry.save_decision_cache`` so the first
+    real request pays **zero** runtime model evaluations.
+
+  * :func:`dot_call_sites` — the jaxpr-level complement: walk the traced
+    program for ``dot_general`` equations (routed *or* unrouted) and report
+    each as ``(op, dims, dtype_bytes)``.  This sees the matmuls that do
+    not dispatch through ``run_op`` (attention scores, absorbed MLA
+    einsums, the router), which is exactly the coverage map the roofline
+    costing needs to prune calibration candidates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.runtime import DEFAULT_BACKEND, AdsalaRuntime
+
+__all__ = ["HarvestedKey", "Recorder", "harvest_decision_keys",
+           "dot_call_sites", "abstract_batch"]
+
+#: one decision-cache key: (backend, op, dtype_bytes, dims)
+HarvestedKey = tuple
+
+
+class Recorder(AdsalaRuntime):
+    """An :class:`AdsalaRuntime` that *records* decision keys instead of
+    evaluating models.  Every ``select_or_default`` logs its key and returns
+    the caller's default knob — no artifacts consulted, no model evals, so
+    tracing a routed program under it is pure bookkeeping."""
+
+    def __init__(self) -> None:
+        super().__init__()
+        self.keys: list[HarvestedKey] = []
+        self._seen: set[HarvestedKey] = set()
+
+    def select_or_default(self, op, dims, dtype_bytes, default, *,
+                          backend=DEFAULT_BACKEND):
+        key = (backend, op, int(dtype_bytes),
+               tuple(int(d) for d in dims))
+        if key not in self._seen:
+            self._seen.add(key)
+            self.keys.append(key)
+        return default
+
+
+def abstract_batch(cfg, batch_size: int, seq_len: int) -> dict:
+    """ShapeDtypeStructs for one input batch of ``cfg``'s modality mix."""
+    batch = {"tokens": jax.ShapeDtypeStruct((batch_size, seq_len),
+                                            jnp.int32)}
+    if cfg.vision_tokens:
+        batch["vision"] = jax.ShapeDtypeStruct(
+            (batch_size, cfg.vision_tokens, 32), jnp.float32)
+    if cfg.family == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (batch_size, cfg.enc_seq, 80), jnp.float32)
+    return batch
+
+
+def harvest_decision_keys(cfg, *, batch_size: int = 1, seq_len: int = 128,
+                          programs: tuple[str, ...] = ("forward", "prefill",
+                                                       "decode")
+                          ) -> list[HarvestedKey]:
+    """Every distinct decision-cache key the routed model will request.
+
+    Traces the requested programs under :func:`jax.eval_shape` with a
+    :class:`Recorder` runtime — abstract evaluation only, so this is cheap
+    enough to run at deploy time for every (config, batch, seq) the server
+    will see.  The config is forced onto the routed path; an un-routed
+    config would trivially harvest nothing.
+    """
+    from repro.models import transformer as tf
+
+    rcfg = dataclasses.replace(cfg, use_pallas_gemm=True)
+    rec = Recorder()
+    params = jax.eval_shape(lambda k: tf.init_params(k, rcfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    batch = abstract_batch(rcfg, batch_size, seq_len)
+
+    if "forward" in programs:
+        jax.eval_shape(lambda p, b: tf.forward(p, b, rcfg, runtime=rec),
+                       params, batch)
+    if "prefill" in programs or "decode" in programs:
+        caches = jax.eval_shape(
+            lambda: tf.init_decode_state(rcfg, batch_size, seq_len + 1))
+        if "prefill" in programs:
+            jax.eval_shape(
+                lambda p, b, c: tf.prefill(p, b, c, rcfg, runtime=rec),
+                params, batch, caches)
+        if "decode" in programs:
+            token = jax.ShapeDtypeStruct((batch_size, 1), jnp.int32)
+            jax.eval_shape(
+                lambda p, t, c: tf.decode_step(p, t, c, rcfg, runtime=rec),
+                params, token, caches)
+    return rec.keys
+
+
+# ---------------------------------------------------------------------------
+# jaxpr-level call-site map (routed or not)
+# ---------------------------------------------------------------------------
+
+def _dot_sites(jaxpr, sites: list) -> None:
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "pallas_call":
+            continue                      # kernel bodies are the dispatch
+        if name == "dot_general":
+            (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+            la, ra = eqn.invars[0].aval, eqn.invars[1].aval
+            m = math.prod(la.shape[d] for d in range(la.ndim)
+                          if d not in tuple(lc) + tuple(lb))
+            k = math.prod(la.shape[d] for d in lc) if lc else 1
+            n = math.prod(ra.shape[d] for d in range(ra.ndim)
+                          if d not in tuple(rc) + tuple(rb))
+            sites.append(("gemm", (int(m), int(k), int(n)),
+                          int(jnp.dtype(la.dtype).itemsize)))
+        for v in eqn.params.values():
+            sub = getattr(v, "jaxpr", None)
+            if sub is not None:
+                _dot_sites(sub, sites)
+
+
+def dot_call_sites(fn, *args, **kwargs) -> list[tuple]:
+    """``(op, (m, k, n), dtype_bytes)`` for every ``dot_general`` reached
+    when tracing ``fn(*args, **kwargs)`` (batch dims folded into ``m``/
+    ``n``; pallas kernel bodies excluded — those are already dispatched)."""
+    sites: list = []
+    _dot_sites(jax.make_jaxpr(lambda *xs: fn(*xs, **kwargs))(*args).jaxpr,
+               sites)
+    return sites

@@ -1,0 +1,286 @@
+"""ADSALA-dispatched model inference (PR 6).
+
+Contracts:
+
+  * routing every dense matmul of the transformer through
+    ``run_op``/:class:`AdsalaRuntime` is **bitwise** identical to the plain
+    ``x @ w`` path — for the dense, MoE and MLA families, on forward,
+    prefill and decode_step — whenever every contraction dim fits one
+    k-tile (≤ 128: the f32 accumulation is then a single exact jnp.dot);
+  * ``run_op``/the kernels take leading-batch activations *natively*
+    (3-D a against a shared 2-D weight — no reshape-collapse, no per-item
+    loop over copies);
+  * the ahead-of-time harvest (``roofline.harvest``) sees every decision
+    key the routed programs will request — including the skinny
+    ``(1, d, n)`` decode GEMMs — with zero model evaluations;
+  * install → ``select_many`` → ``save_decision_cache`` offline, then a
+    fresh runtime hydrated from the registry serves prefill + decode with
+    **zero** runtime model evaluations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.backends import resolve_backend
+from repro.configs import get_smoke_config
+from repro.core.oracle import oracle_time
+from repro.core.registry import ModelRegistry
+from repro.core.runtime import AdsalaRuntime
+from repro.core.tuner import install_subroutine
+from repro.kernels import ops
+from repro.kernels.gemm import gemm_pallas
+from repro.models import transformer as tf
+from repro.models.layers import Ctx, routed_matmul
+from repro.roofline.costing import prune_dominated_candidates
+from repro.roofline.harvest import (Recorder, dot_call_sites,
+                                    harvest_decision_keys)
+
+#: dense / MoE / MLA — one routed arch per family
+ARCHS = ("qwen15_4b", "granite_moe_3b", "deepseek_v2_lite")
+
+
+def _cfg(arch):
+    """Parity config: every contraction dim (d_model, d_ff, moe_d_ff,
+    kv_lora, heads·v_head_dim) ≤ 128 → single k-tile → bitwise."""
+    return dataclasses.replace(get_smoke_config(arch),
+                               compute_dtype="float32",
+                               capacity_factor=8.0, d_ff=128)
+
+
+def _batch(cfg, B, S, seed=0):
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(seed),
+                                          (B, S), 0, cfg.vocab)}
+    if cfg.vision_tokens:
+        batch["vision"] = jax.random.normal(
+            jax.random.PRNGKey(seed + 1), (B, cfg.vision_tokens, 32))
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# bit parity: routed == unrouted on forward / prefill / decode_step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_routed_forward_bit_identical(arch):
+    cfg = _cfg(arch)
+    rcfg = dataclasses.replace(cfg, use_pallas_gemm=True)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, 2, 16)
+    ref, _ = tf.forward(params, batch, cfg)
+    rt = AdsalaRuntime()
+    out, _ = tf.forward(params, batch, rcfg, runtime=rt)
+    assert jnp.array_equal(ref, out), \
+        f"maxdiff {float(jnp.max(jnp.abs(ref - out)))}"
+    # untuned runtime: every decision fell through to the default knob
+    assert rt.stats.for_backend("pallas").model_evals == 0
+    assert rt.stats.for_backend("pallas").default_calls > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_routed_prefill_decode_bit_identical(arch):
+    cfg = _cfg(arch)
+    rcfg = dataclasses.replace(cfg, use_pallas_gemm=True)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 16
+    batch = _batch(cfg, B, S)
+    lu, cu = tf.prefill(params, batch, tf.init_decode_state(cfg, B, S + 4),
+                        cfg)
+    rt = AdsalaRuntime()
+    lr, cr = tf.prefill(params, batch, tf.init_decode_state(rcfg, B, S + 4),
+                        rcfg, runtime=rt)
+    assert jnp.array_equal(lu, lr)
+    tok = jnp.argmax(lu[:, -1:], -1).astype(jnp.int32)
+    du, _ = tf.decode_step(params, tok, cu, cfg)
+    dr, _ = tf.decode_step(params, tok, cr, rcfg, runtime=rt)
+    assert jnp.array_equal(du, dr)
+
+
+def test_routing_respects_config_gates():
+    cfg = _cfg("qwen15_4b")
+    from repro.models.sharding import DEFAULT_RULES
+    x = jnp.ones((2, 8, cfg.d_model))
+    w = jnp.ones((cfg.d_model, 32))
+    # unrouted config → plain matmul (trivially, no pallas trace)
+    ctx = Ctx(cfg, None, DEFAULT_RULES)
+    assert not ctx.routes_gemm(x)
+    assert jnp.array_equal(routed_matmul(x, w, ctx), x @ w)
+    # routed config but a live mesh → sharded einsum path stays untouched
+    rcfg = dataclasses.replace(cfg, use_pallas_gemm=True)
+    assert not Ctx(rcfg, object(), DEFAULT_RULES).routes_gemm(x)
+    # routed, meshless → dispatches (and still matches bitwise)
+    rctx = Ctx(rcfg, None, DEFAULT_RULES)
+    assert rctx.routes_gemm(x)
+    assert jnp.array_equal(routed_matmul(x, w, rctx), x @ w)
+
+
+def test_routed_matmul_high_rank_leading_batch():
+    """≥2 leading axes fold into one stack axis outside any jit loop."""
+    rcfg = dataclasses.replace(_cfg("qwen15_4b"), use_pallas_gemm=True)
+    from repro.models.sharding import DEFAULT_RULES
+    ctx = Ctx(rcfg, None, DEFAULT_RULES)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 8, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+    got = routed_matmul(x, w, ctx)
+    assert got.shape == (2, 3, 8, 32)
+    assert jnp.array_equal(got, x @ w)
+
+
+# ---------------------------------------------------------------------------
+# native leading-batch gemm (shared 2-D weight, no collapse/copy)
+# ---------------------------------------------------------------------------
+
+def test_gemm_pallas_shared_weight_batched():
+    a = jax.random.normal(jax.random.PRNGKey(0), (3, 33, 96))
+    b = jax.random.normal(jax.random.PRNGKey(1), (96, 160))
+    got = gemm_pallas(a, b, bm=128, bk=128, bn=128, interpret=True)
+    want = a @ b
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_run_op_stacked_shared_weight():
+    a = jax.random.normal(jax.random.PRNGKey(0), (4, 17, 64))
+    b = jax.random.normal(jax.random.PRNGKey(1), (64, 48))
+    got = ops.run_op("gemm", (a, b), interpret=True)
+    assert jnp.array_equal(got, a @ b)   # k=64 ≤ 128 → bitwise
+
+
+def test_run_op_stacked_both_batched():
+    a = jax.random.normal(jax.random.PRNGKey(0), (3, 16, 64))
+    b = jax.random.normal(jax.random.PRNGKey(1), (3, 64, 32))
+    got = ops.run_op("gemm", (a, b), interpret=True)
+    assert jnp.array_equal(got, jnp.einsum("bmk,bkn->bmn", a, b))
+
+
+@pytest.mark.parametrize("backend", ("ref", "cpu_blocked"))
+def test_execute_stacked_shared_weight_other_backends(backend):
+    be = resolve_backend(backend)
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((3, 20, 24)).astype(np.float32)
+    b = rng.standard_normal((24, 16)).astype(np.float32)
+    got = np.asarray(be.execute_stacked("gemm", (a, b)))
+    want = a.astype(np.float64) @ b.astype(np.float64)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dims_of_ignores_leading_batch():
+    assert ops.dims_of("gemm", ((5, 33, 64), (64, 96))) == (33, 64, 96)
+    assert ops.dims_of("gemm", ((33, 64), (64, 96))) == (33, 64, 96)
+
+
+# ---------------------------------------------------------------------------
+# ahead-of-time harvest
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_harvest_covers_decode_gemms(arch):
+    cfg = _cfg(arch)
+    keys = harvest_decision_keys(cfg, batch_size=2, seq_len=16)
+    assert keys, "routed model harvested no decision keys"
+    assert all(k[0] == "pallas" and k[1] == "gemm" for k in keys)
+    # the skinny decode-step GEMMs (m = one token) must be present —
+    # missing them means the first decode pays a cold model eval
+    assert any(k[3][0] == 1 for k in keys)
+    # deterministic: same trace → same keys, no duplicates
+    assert keys == harvest_decision_keys(cfg, batch_size=2, seq_len=16)
+    assert len(set(keys)) == len(keys)
+
+
+def test_recorder_is_pure_bookkeeping():
+    rec = Recorder()
+    from repro.kernels.ops import default_knob
+    d = default_knob("gemm")
+    assert rec.select_or_default("gemm", (8, 8, 8), 4, d) is d
+    assert rec.keys == [("pallas", "gemm", 4, (8, 8, 8))]
+    assert rec.stats.model_evals == 0
+
+
+def test_harvest_unrouted_config_is_empty_vs_routed():
+    cfg = _cfg("qwen15_4b")
+    # harvest forces the routed path regardless of the input config's flag
+    routed = harvest_decision_keys(
+        dataclasses.replace(cfg, use_pallas_gemm=True), seq_len=16)
+    assert harvest_decision_keys(cfg, seq_len=16) == routed
+
+
+def test_dot_call_sites_sees_unrouted_matmuls():
+    cfg = _cfg("qwen15_4b")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, 2, 16)
+    sites = dot_call_sites(lambda p, b: tf.forward(p, b, cfg), params, batch)
+    assert sites and all(s[0] == "gemm" and len(s[1]) == 3 for s in sites)
+
+
+def test_prune_dominated_candidates():
+    be = resolve_backend("pallas")
+    space = be.knob_space("gemm", sizes=(128, 256, 512))
+    dims = [(4096, 2048, 2048), (1, 2048, 2048)]
+    pruned = prune_dominated_candidates("gemm", space, dims, dtype_bytes=2,
+                                        slack=0.15)
+    assert 0 < len(pruned) < len(space)
+    # each site's oracle argmin must survive the prune
+    for d in dims:
+        best = min(space.candidates,
+                   key=lambda c: oracle_time("gemm", d, c, dtype_bytes=2))
+        assert best in pruned.candidates
+    # parallelism definition (the nt-analogue feature) is preserved
+    k = pruned.candidates[0]
+    assert pruned.parallelism(k, dims[0]) == space.parallelism(k, dims[0])
+    # empty dims list = nothing to prove = untouched space
+    assert prune_dominated_candidates("gemm", space, []) is space
+
+
+# ---------------------------------------------------------------------------
+# offline prewarm → zero runtime model evaluations
+# ---------------------------------------------------------------------------
+
+def test_prewarm_serves_with_zero_model_evals(tmp_path):
+    B, S = 2, 16
+    rcfg = dataclasses.replace(_cfg("qwen15_4b"), use_pallas_gemm=True)
+    backend = resolve_backend("pallas")
+    keys = harvest_decision_keys(rcfg, batch_size=B, seq_len=S,
+                                 programs=("prefill", "decode"))
+    db = keys[0][2]
+    space = prune_dominated_candidates(
+        "gemm", backend.knob_space("gemm", sizes=(128, 256)),
+        [k[3] for k in keys], dtype_bytes=db)
+    registry = ModelRegistry(tmp_path)
+    install_rt = AdsalaRuntime()
+    sub = install_subroutine(
+        "gemm", space,
+        lambda dims, knob: oracle_time("gemm", dims, knob, dtype_bytes=db),
+        n_samples=30, dim_lo=16, dim_hi=256, dtype_bytes=db,
+        backend="pallas", tune_trials=2)
+    registry.save(sub)
+    install_rt.register(sub)
+    install_rt.select_many([(op, dims, b, be) for (be, op, b, dims) in keys],
+                          record_hits=False)
+    registry.save_decision_cache(install_rt)
+
+    params = tf.init_params(jax.random.PRNGKey(0), rcfg)
+    batch = _batch(rcfg, B, S)
+
+    def serve(runtime) -> int:
+        caches = tf.init_decode_state(rcfg, B, S + 4)
+        logits, caches = tf.prefill(params, batch, caches, rcfg,
+                                    runtime=runtime)
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        tf.decode_step(params, tok, caches, rcfg, runtime=runtime)
+        return int(runtime.stats.for_backend("pallas").model_evals)
+
+    # without the persisted cache every distinct shape pays a model eval
+    cold = AdsalaRuntime()
+    registry.load_into(cold, backend="pallas")
+    assert serve(cold) > 0
+    # with it: all trace-time decisions are cache hits — zero evals
+    warm = AdsalaRuntime()
+    registry.load_into(warm, backend="pallas")
+    assert registry.load_decision_cache(warm) == len(keys)
+    assert serve(warm) == 0
