@@ -29,6 +29,14 @@ Three trajectories:
     harvested decision-key count must match the committed baseline (a
     mismatch means the model's GEMM call-site set changed — re-record).
     All deterministic, immune to timing jitter.
+  * ``BENCH_retune.json`` (gated when ``--retune-fresh`` is given): the
+    online-feedback-loop contract — drift must be detected, the calm phase
+    must NOT trigger, the refit must swap in with zero stale-knob
+    selections, post-swap decisions must be bit-identical to a fresh
+    process loading the retuned artifact, and the version-bumped registry
+    must reject the pre-swap decision cache.  All structural/deterministic
+    (synthetic cost surface, no wall clock); only the p50 cost-recovery
+    ratio gets the standard tolerance gate.
 
     PYTHONPATH=src python scripts/bench_diff.py
     PYTHONPATH=src python scripts/bench_diff.py --fresh /tmp/smoke.json \
@@ -51,6 +59,7 @@ BENCH_PATH = REPO_ROOT / "BENCH_decision.json"
 SERVING_PATH = REPO_ROOT / "BENCH_serving.json"
 KERNELS_PATH = REPO_ROOT / "BENCH_kernels.json"
 MODEL_PATH = REPO_ROOT / "BENCH_model.json"
+RETUNE_PATH = REPO_ROOT / "BENCH_retune.json"
 
 #: summary-level ratios under the standard (--tolerance) gate
 GATED_SUMMARY = ("cold_median_speedup", "batch_speedup")
@@ -69,7 +78,9 @@ HIT_FLOOR = 3.0
 _RECORDERS = {"decision": "benchmarks/decision_bench.py (full mode)",
               "serving": "benchmarks/serve_bench.py --record <entry>",
               "kernels": "benchmarks/kernel_bench.py --record <entry>",
-              "model": "benchmarks/model_bench.py --record <entry>"}
+              "model": "benchmarks/model_bench.py --record <entry>",
+              "retune": "benchmarks/retune_bench.py --smoke --record "
+                        "<entry>"}
 
 
 def committed_baseline(path: Path) -> tuple[str, dict]:
@@ -201,6 +212,39 @@ def gate_model(fresh_json: Path, bench: Path, failures: list) -> None:
             failures.append(f"model.harvested_keys (vs {entry_id})")
 
 
+def gate_retune(fresh_json: Path, bench: Path, tolerance: float,
+                failures: list) -> None:
+    """Online-feedback-loop contract: structural flags exact, the p50
+    cost-recovery ratio under the committed-baseline tolerance gate.  The
+    scenario is a synthetic cost surface — deterministic on any host."""
+    entry_id, base = committed_baseline(bench)
+    data = json.loads(fresh_json.read_text())
+    fresh = data.get("smoke_baseline") or data["summary"]
+
+    structural = (("drift_detected", True), ("no_false_trigger", True),
+                  ("retuned", True), ("post_swap_stale_selections", 0),
+                  ("swap_bit_identical", True),
+                  ("version_mismatch_rejected", True), ("retune_errors", 0))
+    for key, want in structural:
+        got = fresh.get(key)
+        ok = got == want
+        print(f"[bench_diff] {'ok ' if ok else 'REG'} retune.{key}: "
+              f"{got!r} (must be {want!r})")
+        if not ok:
+            failures.append(f"retune.{key}")
+
+    committed = base.get("recovery_p50")
+    measured = fresh.get("recovery_p50")
+    if committed is not None and measured is not None:
+        bar = committed * (1.0 - tolerance)
+        ok = measured >= bar
+        print(f"[bench_diff] {'ok ' if ok else 'REG'} retune.recovery_p50: "
+              f"committed {committed:.2f}x, fresh {measured:.2f}x "
+              f"(floor {bar:.2f}x)")
+        if not ok:
+            failures.append(f"retune.recovery_p50 (vs {entry_id})")
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--bench", type=Path, default=BENCH_PATH,
@@ -224,6 +268,11 @@ def main(argv=None) -> int:
                         "--json PATH); gates BENCH_model.json when given")
     p.add_argument("--model-bench", type=Path, default=MODEL_PATH,
                    help="committed model-serving trajectory file")
+    p.add_argument("--retune-fresh", type=Path, default=None,
+                   help="fresh online-retune metrics (retune_bench --smoke "
+                        "--json PATH); gates BENCH_retune.json when given")
+    p.add_argument("--retune-bench", type=Path, default=RETUNE_PATH,
+                   help="committed online-retune trajectory file")
     p.add_argument("--tolerance", type=float, default=0.25,
                    help="allowed fractional regression per metric")
     args = p.parse_args(argv)
@@ -263,6 +312,9 @@ def main(argv=None) -> int:
                      args.tolerance, failures)
     if args.model_fresh is not None:
         gate_model(args.model_fresh, args.model_bench, failures)
+    if args.retune_fresh is not None:
+        gate_retune(args.retune_fresh, args.retune_bench,
+                    args.tolerance, failures)
 
     if failures:
         print(f"[bench_diff] FAILED vs entry {entry_id!r}: "

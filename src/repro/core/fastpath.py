@@ -497,6 +497,7 @@ class CompiledPredictor:
         self.op = op
         self.knob_space = knob_space
         self.model = model
+        self.artifact_version = 0       # stamped by compile_predictor
         self.coreset = bool(coreset) and knn_coreset is not None \
             and getattr(model, "NAME", None) == "KNN"
         self._predict, self.lowering, self._engine = _fold_model(
@@ -867,7 +868,7 @@ def compile_predictor(sub, *, prune=False,
             or op not in F.SUBROUTINE_NDIMS:
         return None
     try:
-        return CompiledPredictor(
+        cp = CompiledPredictor(
             op, space, pipeline, model,
             getattr(sub, "log_target", False),
             live_idx=getattr(sub, "fast_live_idx", None),
@@ -876,6 +877,12 @@ def compile_predictor(sub, *, prune=False,
             band_idx=getattr(sub, "fast_band_idx", None),
             knn_coreset=getattr(sub, "fast_knn_coreset", None),
             prune=prune, coreset=coreset)
+        # carried through so hot-swap/telemetry consumers (the online
+        # retuner, the decision-cache export) can attribute a prediction to
+        # the artifact generation that produced it without reaching back
+        # into the source subroutine
+        cp.artifact_version = int(getattr(sub, "artifact_version", 0) or 0)
+        return cp
     except Exception as e:                       # noqa: BLE001
         warnings.warn(f"fast-path compile failed for {op!r} "
                       f"({type(e).__name__}: {e}); using reference path",

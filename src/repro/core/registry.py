@@ -13,6 +13,7 @@ from __future__ import annotations
 import json
 import os
 import tempfile
+import threading
 from pathlib import Path
 
 import msgpack
@@ -132,6 +133,9 @@ def load_subroutine(path: str | Path) -> TunedSubroutine:
     if "fast_knn_coreset" in state:
         sub.fast_knn_coreset = np.asarray(state["fast_knn_coreset"],
                                           dtype=np.int64)
+    # registry-stamped artifact generation (absent on artifacts persisted
+    # before versioning, or never saved through a ModelRegistry → 0)
+    sub.artifact_version = int(state.get("artifact_version", 0))
     return sub
 
 
@@ -143,10 +147,49 @@ class ModelRegistry:
     so one directory can hold the full pallas + cpu_blocked (+ custom) sets.
     """
 
+    #: sidecar mapping artifact filename -> last stamped version.  Kept
+    #: separate from the artifacts so the counter survives a delete +
+    #: reinstall of a model file — versions never move backwards.
+    VERSIONS = "versions.json"
+
     def __init__(self, root: str | Path) -> None:
         self.root = Path(root)
+        self._version_lock = threading.Lock()
+
+    @property
+    def versions_path(self) -> Path:
+        return self.root / self.VERSIONS
+
+    def _read_versions(self) -> dict[str, int]:
+        path = self.versions_path
+        if not path.exists():
+            return {}
+        try:
+            return {str(k): int(v)
+                    for k, v in json.loads(path.read_text()).items()}
+        except (ValueError, OSError):
+            return {}
+
+    def artifact_version(self, name: str) -> int:
+        """Last version stamped for this artifact filename (0 = never)."""
+        return self._read_versions().get(name, 0)
 
     def save(self, sub: TunedSubroutine) -> Path:
+        """Persist one artifact, stamping the next monotonically increasing
+        version for its filename onto ``sub.artifact_version`` first.  A
+        reinstalled/retuned model therefore never shares a version with its
+        predecessor, and decision-cache entries recorded against the old
+        generation are rejected at warm start."""
+        name = artifact_name(sub)
+        with self._version_lock:
+            versions = self._read_versions()
+            # never move backwards, even if the sub was stamped elsewhere
+            versions[name] = max(versions.get(name, 0),
+                                 int(getattr(sub, "artifact_version", 0))) + 1
+            sub.artifact_version = versions[name]
+            _atomic_write(self.versions_path,
+                          json.dumps(versions, indent=1, sort_keys=True)
+                          .encode())
         return save_subroutine(sub, self.root)
 
     def load_all(self, backend: str | None = None) -> list[TunedSubroutine]:
@@ -188,20 +231,28 @@ class ModelRegistry:
 
     def save_decision_cache(self, runtime) -> Path:
         """Persist the runtime's LRU decision cache beside the artifacts so a
-        restarted server warm-starts past the cold model evaluations."""
-        payload = {"version": 1, "entries": runtime.export_cache()}
+        restarted server warm-starts past the cold model evaluations.
+
+        Payload v2: every entry carries the ``artifact_version`` of the
+        subroutine that made the decision, so a restart after a reinstall
+        or an online retune rejects the stale entries instead of replaying
+        the predecessor model's knobs with zero evals and no warning."""
+        payload = {"version": 2, "entries": runtime.export_cache()}
         _atomic_write(self.decision_cache_path,
                       json.dumps(payload, indent=1).encode())
         return self.decision_cache_path
 
     def load_decision_cache(self, runtime) -> int:
         """Warm-start ``runtime`` from a persisted decision cache; returns
-        the number of imported decisions (0 when no cache file exists)."""
+        the number of imported decisions (0 when no cache file exists).
+        v1 caches (persisted before artifact versioning) load with their
+        entries treated as version 0 — they only warm-start version-0
+        (never-registry-stamped) subroutines."""
         path = self.decision_cache_path
         if not path.exists():
             return 0
         payload = json.loads(path.read_text())
-        if int(payload.get("version", 1)) != 1:
+        if int(payload.get("version", 1)) not in (1, 2):
             raise ValueError(f"{path}: unknown decision-cache version "
                              f"{payload.get('version')!r}")
         return runtime.import_cache(payload["entries"])

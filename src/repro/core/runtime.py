@@ -38,6 +38,15 @@ Hot-path design (this is the most-called code in the serving stack):
 * **select_many** batches the misses of several pending decisions sharing a
   subroutine into ONE fused feature-build + model-predict call — the
   serving layer routes bucket flushes through it.
+* **Models can be hot-swapped while serving.**  :meth:`AdsalaRuntime.swap`
+  replaces a subroutine's model, bumps its swap epoch, and invalidates its
+  decision-cache entries in one critical section; miss-path evaluations
+  snapshot the epoch and refuse to store a decision computed against a
+  superseded model.  In-flight selects finish on the old predictor, every
+  select that starts after the swap returns sees the new one.  The online
+  retuner (:mod:`repro.serving.retune`) drives this seam.  Decision-cache
+  exports carry each subroutine's registry-stamped ``artifact_version`` so
+  a warm restart rejects entries from a different model generation.
 """
 
 from __future__ import annotations
@@ -68,12 +77,16 @@ class _Inflight:
     evaluation).  ``event`` may be shared: ``select_many`` backs all the
     keys of one fused evaluation with a single Event (they resolve
     together, and per-key Event allocation is measurable on the batched
-    path)."""
-    __slots__ = ("event", "knob")
+    path).  ``epoch`` is the subroutine's swap epoch at the leader's
+    snapshot: a follower whose own snapshot is newer must NOT ride this
+    evaluation — the leader is computing against a predecessor model."""
+    __slots__ = ("event", "knob", "epoch")
 
-    def __init__(self, event: threading.Event | None = None) -> None:
+    def __init__(self, event: threading.Event | None = None,
+                 epoch: int = 0) -> None:
         self.event = event if event is not None else threading.Event()
         self.knob: Knob | None = None
+        self.epoch = epoch
 
 
 class _Shard:
@@ -92,6 +105,14 @@ class _Shard:
         with self.lock:
             self.model_evals += n
             self.eval_seconds += dt
+
+    def snapshot(self) -> tuple[int, float]:
+        """(model_evals, eval_seconds) read together under the shard lock.
+        A lock-free reader racing ``count_eval`` could observe the
+        incremented count without the added seconds — the pair must be
+        taken in one critical section to stay mutually consistent."""
+        with self.lock:
+            return self.model_evals, self.eval_seconds
 
 
 class _HitStripe:
@@ -142,14 +163,32 @@ class BackendStats:
 @dataclasses.dataclass
 class BucketStats:
     """Serving-layer accounting for one shape bucket (= one decision-cache
-    key): how many stacked executions it saw and how well they amortised."""
+    key): how many stacked executions it saw, how well they amortised, and
+    where its requests' time went.  ``exec_seconds`` covers ONLY the
+    stacked ``run_op`` span; scheduler-side queue/linger wait is accounted
+    separately in ``queue_seconds`` — mixing the two would poison the
+    online retrainer's telemetry with batching-policy artifacts."""
     batches: int = 0
     requests: int = 0
     max_batch: int = 0
+    exec_seconds: float = 0.0     # sum of stacked-execution spans
+    exec_items: int = 0           # stacked rows executed (incl. pad filler)
+    queue_seconds: float = 0.0    # sum over requests of submit→exec-start
 
     @property
     def mean_batch(self) -> float:
         return self.requests / self.batches if self.batches else 0.0
+
+    @property
+    def mean_exec_per_item(self) -> float:
+        """Mean measured execution seconds per stacked row — the telemetry
+        signal the drift detector compares against the install-time
+        predictor's per-call prediction."""
+        return self.exec_seconds / self.exec_items if self.exec_items else 0.0
+
+    @property
+    def mean_queue(self) -> float:
+        return self.queue_seconds / self.requests if self.requests else 0.0
 
 
 @dataclasses.dataclass
@@ -159,6 +198,16 @@ class RuntimeStats:
     default_calls: int = 0
     model_evals: int = 0
     eval_seconds: float = 0.0
+    #: import_cache entries rejected because they were decided by a
+    #: different artifact generation (stale persisted cache)
+    import_drops_version: int = 0
+    #: import_cache entries rejected because their knob left the registered
+    #: candidate space (recalibration changed the space)
+    import_drops_knob: int = 0
+    #: hot swaps applied (online retune / reinstall) and the decision-cache
+    #: entries they invalidated
+    swaps: int = 0
+    swap_invalidations: int = 0
     backends: dict[str, BackendStats] = dataclasses.field(
         default_factory=dict)
     #: per shape-bucket serving stats, keyed (backend, op, dtype_bytes, dims)
@@ -200,6 +249,13 @@ class AdsalaRuntime:
         self._subs: dict[tuple[str, str, int], TunedSubroutine] = {}
         self._fast: dict[tuple[str, str, int], object] = {}
         self._shards: dict[tuple[str, str], _Shard] = {}
+        # per-subroutine swap epoch: bumped (under the lock) whenever the
+        # registered model for a key is replaced.  Miss-path evaluations
+        # snapshot it before reading the model and refuse to STORE a knob
+        # computed against a superseded epoch — an in-flight select may
+        # still RETURN the old decision (it was in flight when the swap
+        # landed), but it can never repollute the invalidated cache
+        self._swap_epochs: dict[tuple[str, str, int], int] = {}
         self._cache: collections.OrderedDict[tuple, Knob] = \
             collections.OrderedDict()      # authoritative LRU, lock-guarded
         self._cache_mirror: dict[tuple, Knob] = {}   # lock-free read mirror
@@ -222,6 +278,7 @@ class AdsalaRuntime:
         self._subs_get = self._subs.get
         self._fast_get = self._fast.get
         self._shards_get = self._shards.get
+        self._epoch_get = self._swap_epochs.get
 
     # -- statistics -----------------------------------------------------------
     @staticmethod
@@ -247,6 +304,10 @@ class AdsalaRuntime:
                 default_calls=base.default_calls,
                 model_evals=base.model_evals,
                 eval_seconds=base.eval_seconds,
+                import_drops_version=base.import_drops_version,
+                import_drops_knob=base.import_drops_knob,
+                swaps=base.swaps,
+                swap_invalidations=base.swap_invalidations,
                 backends={n: dataclasses.replace(b)
                           for n, b in base.backends.items()},
                 buckets={k: dataclasses.replace(b)
@@ -255,7 +316,10 @@ class AdsalaRuntime:
                 for name, hits in stripe.pairs():
                     self._add_hits(merged, name, hits)
             for (backend, _op), shard in self._shards.items():
-                evals, secs = shard.model_evals, shard.eval_seconds
+                # snapshot BOTH counters under the shard lock: an unlocked
+                # pair of reads racing count_eval on another thread could
+                # see the incremented count without the added seconds
+                evals, secs = shard.snapshot()
                 if evals or secs:
                     merged.calls += evals
                     merged.model_evals += evals
@@ -328,9 +392,54 @@ class AdsalaRuntime:
         # select() then falls back to the artifact's reference path)
         compiled = compile_predictor(sub, prune=self._fast_prune,
                                      coreset=self._fast_knn_coreset)
+        sub_key = (name, sub.op, sub.dtype_bytes)
         with self._lock:
-            self._subs[(name, sub.op, sub.dtype_bytes)] = sub
-            self._fast[(name, sub.op, sub.dtype_bytes)] = compiled
+            if sub_key in self._subs:
+                # replacing a live model: in-flight evaluations against the
+                # old one must not store their (stale) decisions
+                self._swap_epochs[sub_key] = \
+                    self._swap_epochs.get(sub_key, 0) + 1
+            self._subs[sub_key] = sub
+            self._fast[sub_key] = compiled
+
+    def swap(self, sub: TunedSubroutine, *,
+             backend: str | None = None) -> int:
+        """Atomically hot-swap the registered model for ``sub``'s key and
+        invalidate its decision-cache entries; returns how many cached
+        decisions were invalidated.
+
+        The replacement, the epoch bump, and the cache invalidation happen
+        in ONE critical section: a ``select`` that starts after ``swap``
+        returns can neither hit a cached decision of the old model nor ride
+        an in-flight evaluation the old model is still computing (the
+        epoch stamp on the in-flight entry no longer matches).  Calls
+        already past the cache probe finish on the old predictor — they
+        were in flight when the swap landed — but their results are never
+        stored.  This is the online-retune seam: the fast-path predictor is
+        compiled *before* the lock is taken, so the critical section is a
+        few dict operations regardless of model family."""
+        name = backend or getattr(sub, "backend", None) or DEFAULT_BACKEND
+        compiled = compile_predictor(sub, prune=self._fast_prune,
+                                     coreset=self._fast_knn_coreset)
+        sub_key = (name, sub.op, sub.dtype_bytes)
+        with self._lock:
+            self._swap_epochs[sub_key] = self._swap_epochs.get(sub_key, 0) + 1
+            self._subs[sub_key] = sub
+            self._fast[sub_key] = compiled
+            self._fold_touches_locked()
+            stale = [k for k in self._cache if k[:3] == sub_key]
+            for k in stale:
+                del self._cache[k]
+                self._cache_mirror.pop(k, None)
+            self._base.swaps += 1
+            self._base.swap_invalidations += len(stale)
+        return len(stale)
+
+    def _version_of(self, sub_key: tuple) -> int:
+        """Artifact generation of the registered subroutine (0 when the
+        subroutine is unregistered or was never registry-stamped)."""
+        sub = self._subs_get(sub_key)
+        return int(getattr(sub, "artifact_version", 0) or 0)
 
     def has(self, op: str, dtype_bytes: int,
             backend: str = DEFAULT_BACKEND) -> bool:
@@ -398,20 +507,25 @@ class AdsalaRuntime:
         sub_key = (backend, op, dtype_bytes)
         if self._subs_get(sub_key) is None:
             raise KeyError(sub_key)
+        epoch = self._epoch_get(sub_key, 0)   # before joining the in-flight
         shard = self._shard((backend, op))
         with shard.lock:
             ent = shard.inflight.get(key)
             leader = ent is None
             if leader:
-                ent = shard.inflight[key] = _Inflight()
+                ent = shard.inflight[key] = _Inflight(epoch=epoch)
         if not leader:
             # same-key coalescing: ride the evaluation already in flight
             # (a knob served from someone else's paid-for computation is a
-            # hit for accounting purposes)
-            if ent.event.wait(timeout=60.0) and ent.knob is not None:
+            # hit for accounting purposes) — unless that evaluation began
+            # before a hot swap we have already observed: its result is the
+            # superseded model's decision and must not be served to a call
+            # that started after the swap completed
+            if ent.epoch == epoch and ent.event.wait(timeout=60.0) \
+                    and ent.knob is not None:
                 self._record_hit(backend, key)
                 return ent.knob
-            return self._evaluate_and_store(key, sub_key, shard)
+            return self._evaluate_and_store(key, sub_key, shard, epoch)
         try:
             # re-probe after winning leadership: a thread descheduled
             # between the lock-free cache check and here may find the key
@@ -422,7 +536,8 @@ class AdsalaRuntime:
                 ent.knob = knob
                 self._record_hit(backend, key)
                 return knob
-            knob = ent.knob = self._evaluate_and_store(key, sub_key, shard)
+            knob = ent.knob = self._evaluate_and_store(key, sub_key, shard,
+                                                       epoch)
             return knob
         finally:
             ent.event.set()
@@ -430,7 +545,7 @@ class AdsalaRuntime:
                 shard.inflight.pop(key, None)
 
     def _evaluate_and_store(self, key: tuple, sub_key: tuple,
-                            shard: _Shard) -> Knob:
+                            shard: _Shard, epoch: int) -> Knob:
         # model evaluation runs with NO lock held (pure numpy,
         # deterministic) so concurrent distinct-shape selections never
         # serialise; eval statistics live on the (backend, op) shard
@@ -440,7 +555,11 @@ class AdsalaRuntime:
         knob = fast.select(key[3]) if fast is not None else sub.select(key[3])
         shard.count_eval(time.perf_counter() - t0)
         with self._lock:
-            self._store_locked(key, knob)
+            # a hot swap invalidated this subroutine's cache entries while
+            # we were evaluating: our knob may be the OLD model's decision —
+            # return it (this call was in flight) but never store it
+            if self._swap_epochs.get(sub_key, 0) == epoch:
+                self._store_locked(key, knob)
         return knob
 
     def _store_locked(self, key: tuple, knob: Knob) -> None:
@@ -520,9 +639,12 @@ class AdsalaRuntime:
         # own selections by design, and without this the loser of the race
         # double-counted (and double-paid) the evaluation
         shard_groups: dict = {}               # shard -> [keys]
+        epochs: dict[tuple, int] = {}         # sub_key -> swap epoch snapshot
         for key in misses:
             if self._subs_get(key[:3]) is None:
                 continue                      # unregistered: stays None
+            if key[:3] not in epochs:         # before joining the in-flight
+                epochs[key[:3]] = self._epoch_get(key[:3], 0)
             shard_groups.setdefault(self._shard(key[:2]), []).append(key)
         by_sub: dict[tuple, list[tuple]] = {}
         owned: dict[tuple, tuple] = {}        # key -> (_Inflight, shard)
@@ -538,7 +660,8 @@ class AdsalaRuntime:
                 for key in keys:
                     ent = shard.inflight.get(key)
                     if ent is None:
-                        ent = shard.inflight[key] = _Inflight(batch_event)
+                        ent = shard.inflight[key] = _Inflight(
+                            batch_event, epoch=epochs[key[:3]])
                         owned[key] = (ent, shard)
                     else:
                         followers[key] = ent
@@ -573,7 +696,11 @@ class AdsalaRuntime:
                 with self._lock:
                     for key in owned:
                         knob = resolved.get(key)
-                        if knob is not None:
+                        # skip keys whose subroutine was hot-swapped while
+                        # we evaluated: the knob is the old model's decision
+                        # (returned to this in-flight caller, never stored)
+                        if knob is not None and self._swap_epochs.get(
+                                key[:3], 0) == epochs[key[:3]]:
                             self._store_locked(key, knob)
         finally:
             # release owned entries BEFORE waiting on anyone else's (no
@@ -590,13 +717,16 @@ class AdsalaRuntime:
                         if key in owned:
                             shard.inflight.pop(key, None)
         # absorb keys someone else was already evaluating — their eval,
-        # their eval-count; recorded as a hit only when hits are recorded
+        # their eval-count; recorded as a hit only when hits are recorded.
+        # An entry whose epoch predates our snapshot is a pre-swap leader
+        # still computing on the superseded model: evaluate fresh instead.
         for key, ent in followers.items():
-            if ent.event.wait(timeout=60.0) and ent.knob is not None:
+            if ent.epoch == epochs[key[:3]] and ent.event.wait(timeout=60.0) \
+                    and ent.knob is not None:
                 resolved[key] = ent.knob
                 if record_hits:
                     self._record_hit(key[0], key)
-            else:                             # timed out / leader failed
+            else:                 # timed out / leader failed / stale epoch
                 resolved[key] = self.select(key[1], key[3], key[2],
                                             backend=key[0])
         for key, slots in misses.items():
@@ -611,24 +741,42 @@ class AdsalaRuntime:
 
     # -- serving accounting ---------------------------------------------------
     def record_batch(self, op: str, dims: tuple[int, ...], dtype_bytes: int,
-                     backend: str, batch_size: int) -> None:
+                     backend: str, batch_size: int, *,
+                     exec_seconds: float = 0.0, exec_items: int = 0,
+                     queue_seconds: float = 0.0) -> None:
         """Credit one stacked execution of ``batch_size`` requests to the
-        shape bucket keyed like the decision cache (serving layer hook)."""
+        shape bucket keyed like the decision cache (serving layer hook).
+
+        ``exec_seconds`` must cover ONLY the stacked execution span (the
+        ``run_op`` call) over ``exec_items`` stacked rows; queue/linger wait
+        accumulated before execution goes into ``queue_seconds``.  The
+        execution-only split is what the online retuner samples — a span
+        that included scheduler wait would read as model drift every time
+        the batching policy lingered."""
         key = (backend, op, dtype_bytes, tuple(int(d) for d in dims))
         with self._lock:
             b = self._base.for_bucket(key)
             b.batches += 1
             b.requests += int(batch_size)
             b.max_batch = max(b.max_batch, int(batch_size))
+            b.exec_seconds += float(exec_seconds)
+            b.exec_items += int(exec_items)
+            b.queue_seconds += float(queue_seconds)
 
     # -- warm-start persistence ----------------------------------------------
     def export_cache(self) -> list[dict]:
         """Decision-cache contents as JSON-safe records, LRU-oldest first,
-        so a restarted server can skip the cold-start model evaluations."""
+        so a restarted server can skip the cold-start model evaluations.
+
+        Each record carries the ``artifact_version`` of the subroutine that
+        is registered for its key *now* — which is also the one that made
+        the decision, because :meth:`swap` invalidates a subroutine's
+        entries in the same critical section that replaces it."""
         with self._lock:
             self._fold_touches_locked()
             return [{"backend": k[0], "op": k[1], "dtype_bytes": int(k[2]),
-                     "dims": [int(d) for d in k[3]], "knob": knob.dict}
+                     "dims": [int(d) for d in k[3]], "knob": knob.dict,
+                     "artifact_version": self._version_of(k[:3])}
                     for k, knob in self._cache.items()]
 
     def import_cache(self, entries: list[dict]) -> int:
@@ -641,11 +789,22 @@ class AdsalaRuntime:
         that ``select_or_default`` still serves its default for subroutines
         with no registered model, warm cache or not.
 
-        A persisted cache can outlive a recalibration: entries whose knob no
-        longer exists in the *registered* subroutine's candidate space are
-        dropped (stale artifacts must not dictate impossible configs).
+        A persisted cache can outlive the model that produced it, two ways —
+        both are dropped with a counted stat instead of replayed:
+
+        * **generation mismatch** (``stats.import_drops_version``): the
+          entry's ``artifact_version`` differs from the registered
+          subroutine's — a reinstall/retune happened between persist and
+          warm start, so the cached knob is the predecessor model's
+          decision.  Entries with no version field (pre-versioning caches)
+          are treated as version 0 and only match never-stamped artifacts.
+        * **knob left the space** (``stats.import_drops_knob``): a
+          recalibration changed the candidate space and the cached knob no
+          longer exists in it (stale artifacts must not dictate impossible
+          configs).
+
         Entries for unregistered subroutines import as-is — there is no
-        space to validate against yet.
+        model or space to validate against yet.
         """
         n = 0
         with self._lock:
@@ -655,8 +814,14 @@ class AdsalaRuntime:
                        tuple(int(d) for d in e["dims"]))
                 knob = Knob(tuple(sorted(e["knob"].items())))
                 sub = self._subs.get(key[:3])
+                if sub is not None and \
+                        int(e.get("artifact_version", 0)) != \
+                        self._version_of(key[:3]):
+                    self._base.import_drops_version += 1
+                    continue
                 space = getattr(sub, "knob_space", None)
                 if space is not None and knob not in space.candidates:
+                    self._base.import_drops_knob += 1
                     continue
                 self._cache[key] = knob
                 self._cache.move_to_end(key)

@@ -43,6 +43,13 @@ class TunedSubroutine:
     reports: list[ModelReport] = dataclasses.field(default_factory=list)
     dataset: TimingDataset | None = None
     backend: str = "pallas"             # execution backend this was tuned on
+    #: monotonically increasing per-artifact generation, stamped by
+    #: :meth:`~repro.core.registry.ModelRegistry.save` (0 = never persisted
+    #: through a registry / pre-versioning artifact).  The runtime persists
+    #: it with every decision-cache entry so a warm restart can reject
+    #: decisions made by a different generation of this model instead of
+    #: silently replaying a predecessor's knobs.
+    artifact_version: int = 0
     #: dominated-candidate analysis for the compiled fast path (optional,
     #: persisted): knob indices the model ever argmin-selects over the
     #: install dataset's dims, and that dataset's dims bounding box
@@ -107,6 +114,8 @@ class TunedSubroutine:
         }
         # optional keys: absent on pre-fast-path artifacts, ignored by
         # older readers — no schema bump needed
+        if self.artifact_version:
+            state["artifact_version"] = int(self.artifact_version)
         if self.fast_live_idx is not None:
             state["fast_live_idx"] = np.asarray(self.fast_live_idx,
                                                 dtype=np.int64)

@@ -3,11 +3,16 @@
     BlasService — submit()/call() front-end, scheduler + bounded worker pool
     ServeConfig — bucket/flush knobs (max_batch, linger_ms, workers, ...)
     ServeStats  — service-level counters (per-bucket detail on the runtime)
+    Retuner     — drift-aware online retraining loop (opt-in; pass one to
+                  BlasService to close the serving→install feedback loop)
 
-See ``repro/serving/service.py`` for the life-of-a-request diagram and
+See ``repro/serving/service.py`` for the life-of-a-request diagram,
+``repro/serving/retune.py`` for the drift/refit/hot-swap semantics, and
 ``benchmarks/serve_bench.py`` for the batched-vs-unbatched load harness.
 """
 
+from .retune import Retuner, RetuneConfig, RetuneStats
 from .service import BlasService, ServeConfig, ServeStats, bucket_key
 
-__all__ = ["BlasService", "ServeConfig", "ServeStats", "bucket_key"]
+__all__ = ["BlasService", "ServeConfig", "ServeStats", "bucket_key",
+           "Retuner", "RetuneConfig", "RetuneStats"]

@@ -107,7 +107,14 @@ class ServeConfig:
 @dataclasses.dataclass
 class ServeStats:
     """Service-level aggregates; per-bucket detail lives in
-    ``runtime.stats.buckets`` (see :meth:`BlasService.bucket_stats`)."""
+    ``runtime.stats.buckets`` (see :meth:`BlasService.bucket_stats`).
+
+    End-to-end latency is split into its two phases: ``queue_sum`` is time
+    spent parked in a bucket (linger/backlog — a batching-policy artifact),
+    ``exec_sum`` is time inside the stacked ``run_op`` call.  The split is
+    load-bearing: the online retuner compares *execution* time against the
+    model's predictions, and a span that silently included scheduler wait
+    would read as drift whenever the flush policy lingered."""
     submitted: int = 0
     completed: int = 0
     failed: int = 0
@@ -115,6 +122,8 @@ class ServeStats:
     max_batch: int = 0
     padded_items: int = 0         # filler rows added for canonical widths
     latency_sum: float = 0.0      # submit→result, seconds, completed only
+    queue_sum: float = 0.0        # submit→execution-start (bucket wait)
+    exec_sum: float = 0.0         # per-request share: its batch's exec span
 
     @property
     def mean_batch(self) -> float:
@@ -124,6 +133,14 @@ class ServeStats:
     @property
     def mean_latency(self) -> float:
         return self.latency_sum / self.completed if self.completed else 0.0
+
+    @property
+    def mean_queue_latency(self) -> float:
+        return self.queue_sum / self.completed if self.completed else 0.0
+
+    @property
+    def mean_exec_latency(self) -> float:
+        return self.exec_sum / self.completed if self.completed else 0.0
 
 
 def bucket_key(op: str, shapes: Sequence[tuple[int, ...]], dtypes,
@@ -181,7 +198,7 @@ class BlasService:
 
     def __init__(self, *, runtime: Optional[AdsalaRuntime] = None,
                  config: Optional[ServeConfig] = None,
-                 registry=None) -> None:
+                 registry=None, retuner=None) -> None:
         self.runtime = runtime if runtime is not None else global_runtime()
         self.config = config if config is not None else ServeConfig()
         self.registry = registry
@@ -189,6 +206,12 @@ class BlasService:
         self.warm_started = 0
         if registry is not None:
             self.warm_started = registry.load_decision_cache(self.runtime)
+        # optional online feedback loop (repro.serving.retune.Retuner):
+        # started once the workers are up, stopped before the decision
+        # cache is persisted on close so the saved cache reflects the final
+        # artifact generations.  Omit it (the default) for reproducibility
+        # runs.
+        self.retuner = retuner
 
         # scoped trace-time decision batcher (ServeConfig.trace_batching):
         # entered before the workers start, exited (previous batcher
@@ -207,6 +230,8 @@ class BlasService:
                 self._trace_cm.__exit__(None, None, None)
                 self._trace_cm = None
             raise
+        if self.retuner is not None:
+            self.retuner.start()
 
     def _start(self) -> None:
         self._mutex = threading.Lock()
@@ -351,6 +376,8 @@ class BlasService:
         if self._trace_cm is not None:      # restore the previous batcher
             self._trace_cm.__exit__(None, None, None)
             self._trace_cm = None
+        if self.retuner is not None:        # before the cache is persisted:
+            self.retuner.stop()             # no swap may race the export
         if self.registry is not None:
             self.registry.save_decision_cache(self.runtime)
 
@@ -449,11 +476,16 @@ class BlasService:
         reqs = bucket.requests
         backend, op, dtype_bytes, dims, _dtype, _extra = bucket.key
         width = self._pad_width(len(reqs), backend)
+        # the stack build is accounted as queue time, not execution: only
+        # the run_op span is "executing" — the retuner compares it against
+        # the model's per-call predictions, and folding scheduler-side work
+        # (queue wait, linger, stacking) into it would read as drift
         try:
             stacked = tuple(
                 np.stack([r.operands[i] for r in reqs] +
                          [reqs[-1].operands[i]] * (width - len(reqs)))
                 for i in range(len(reqs[0].operands)))
+            t_exec = time.monotonic()
             out = np.asarray(run_op(op, stacked, backend=backend,
                                     runtime=self.runtime, stacked=True,
                                     **reqs[0].kw))
@@ -468,7 +500,12 @@ class BlasService:
                 self._pending -= len(reqs)
                 self._done.notify_all()
             return
-        self.runtime.record_batch(op, dims, dtype_bytes, backend, len(reqs))
+        t_done = time.monotonic()
+        exec_span = t_done - t_exec
+        queue_span = sum(t_exec - r.t_submit for r in reqs)
+        self.runtime.record_batch(op, dims, dtype_bytes, backend, len(reqs),
+                                  exec_seconds=exec_span, exec_items=width,
+                                  queue_seconds=queue_span)
         now = time.monotonic()
         for i, r in enumerate(reqs):
             # copy: a view of out would pin the whole (possibly padded)
@@ -482,5 +519,7 @@ class BlasService:
             self.stats.max_batch = max(self.stats.max_batch, len(reqs))
             self.stats.padded_items += width - len(reqs)
             self.stats.latency_sum += sum(now - r.t_submit for r in reqs)
+            self.stats.queue_sum += queue_span
+            self.stats.exec_sum += exec_span * len(reqs)
             self._pending -= len(reqs)
             self._done.notify_all()

@@ -1,0 +1,367 @@
+"""Online feedback loop: hot-swap atomicity under contention, artifact
+version round-trips through the decision cache, and the drift-detecting
+Retuner (trigger/no-trigger, telemetry keying, blend refit, swap wiring)."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import AdsalaRuntime, ModelRegistry, install_subroutine
+from repro.core.knobs import Knob
+from repro.kernels import ops
+from repro.serving import (BlasService, Retuner, RetuneConfig, ServeConfig,
+                           bucket_key)
+
+
+class GenSub:
+    """Stub whose knob carries its generation — a reader can tell WHICH
+    model answered its select."""
+
+    def __init__(self, backend: str, gen: int, op: str = "gemm",
+                 dtype_bytes: int = 4) -> None:
+        self.backend = backend
+        self.op = op
+        self.dtype_bytes = dtype_bytes
+        self.gen = gen
+        self.knob = Knob((("gen", gen),))
+        self.artifact_version = gen
+
+    def select(self, dims):
+        return self.knob
+
+
+@pytest.fixture(scope="module")
+def tuned():
+    """One real tuned artifact (flat-time timer keeps the install fast)."""
+    space = ops.knob_space_for("gemm", sizes=(32, 64))
+    return install_subroutine(
+        "gemm", space, lambda dims, knob: 1e-3, n_samples=12,
+        dim_lo=32, dim_hi=64, max_footprint_bytes=1_000_000,
+        tune_trials=1, candidates=("LinearRegression",), use_lof=False,
+        backend="pallas")
+
+
+# ---------------------------------------------------------------------------
+# hot-swap atomicity
+# ---------------------------------------------------------------------------
+
+def test_swap_atomicity_under_contention():
+    """N threads hammer select/select_many through a stream of swaps.  The
+    contract: once swap() has returned, NO select may answer with an older
+    generation — a reader that snapshots the published generation before
+    its select must get a knob at least that new.  And nothing deadlocks."""
+    rt = AdsalaRuntime(cache_size=64)
+    rt.register(GenSub("b0", 0))
+    dims_pool = [(32 * i, 32, 32) for i in range(1, 5)]
+    published = [0]                  # generation of the last COMPLETED swap
+    errors = []
+    stop = threading.Event()
+
+    def reader(tid):
+        try:
+            i = 0
+            while not stop.is_set():
+                i += 1
+                g = published[0]
+                if i % 3 == 0:
+                    knobs = rt.select_many(
+                        [("gemm", d, 4, "b0") for d in dims_pool])
+                    for k in knobs:
+                        assert k["gen"] >= g, (k["gen"], g)
+                else:
+                    k = rt.select("gemm", dims_pool[i % 4], 4, backend="b0")
+                    assert k["gen"] >= g, (k["gen"], g)
+        except Exception as e:   # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=reader, args=(t,)) for t in range(6)]
+    for t in threads:
+        t.start()
+    for gen in range(1, 25):
+        rt.swap(GenSub("b0", gen))
+        published[0] = gen           # readers starting now must see >= gen
+        time.sleep(0.002)
+    stop.set()
+    for t in threads:
+        t.join(timeout=30)
+        assert not t.is_alive(), "reader deadlocked across swaps"
+    assert not errors, errors[:3]
+    s = rt.stats
+    assert s.swaps == 24
+    # every post-final-swap select answers with the final generation
+    assert rt.select("gemm", dims_pool[0], 4, backend="b0")["gen"] == 24
+
+
+def test_swap_invalidates_only_its_own_subroutine():
+    rt = AdsalaRuntime()
+    rt.register(GenSub("b0", 1))
+    rt.register(GenSub("b1", 1))
+    for d in ((32, 32, 32), (64, 32, 32)):
+        rt.select("gemm", d, 4, backend="b0")
+        rt.select("gemm", d, 4, backend="b1")
+    assert rt.swap(GenSub("b0", 2)) == 2
+    # b0's decisions are gone, b1's survive untouched
+    assert rt.peek("gemm", (32, 32, 32), 4, backend="b0") is None
+    assert rt.peek("gemm", (32, 32, 32), 4, backend="b1") is not None
+    assert rt.stats.swap_invalidations == 2
+    assert rt.select("gemm", (32, 32, 32), 4, backend="b0")["gen"] == 2
+
+
+def test_register_replacement_also_bumps_epoch():
+    """Replacing via register() must not leave stale in-flight or cached
+    decisions either (swap() is register-replace + invalidate)."""
+    rt = AdsalaRuntime()
+    rt.register(GenSub("b0", 1))
+    rt.select("gemm", (32, 32, 32), 4, backend="b0")
+    rt.register(GenSub("b0", 2))
+    # register() does not invalidate the cache (that's swap's contract) —
+    # but a cold key must be answered by the new model
+    assert rt.select("gemm", (64, 32, 32), 4, backend="b0")["gen"] == 2
+
+
+# ---------------------------------------------------------------------------
+# artifact versioning through the decision cache
+# ---------------------------------------------------------------------------
+
+def test_version_bumped_registry_rejects_pre_bump_cache(tmp_path, tuned):
+    reg = ModelRegistry(tmp_path)
+    reg.save(tuned)                                  # artifact_version 1
+    assert tuned.artifact_version == 1
+    rt = AdsalaRuntime()
+    rt.register(tuned)
+    shapes = [(32 * i, 32, 32) for i in range(1, 5)]
+    for d in shapes:
+        rt.select("gemm", d, 4, backend="pallas")
+    reg.save_decision_cache(rt)                      # entries stamped v1
+
+    reg.save(tuned)                                  # bump → 2
+    assert tuned.artifact_version == 2
+    rt2 = AdsalaRuntime()
+    rt2.register(reg.load_all(backend="pallas")[0])  # loads the v2 artifact
+    assert reg.load_decision_cache(rt2) == 0         # v1 cache: rejected
+    assert rt2.stats.import_drops_version == len(shapes)
+    assert rt2.cache_len() == 0
+
+    # the matching-version cache round-trips
+    for d in shapes:
+        rt2.select("gemm", d, 4, backend="pallas")
+    reg.save_decision_cache(rt2)
+    rt3 = AdsalaRuntime()
+    rt3.register(reg.load_all(backend="pallas")[0])
+    assert reg.load_decision_cache(rt3) == len(shapes)
+    assert rt3.stats.import_drops_version == 0
+    for d in shapes:
+        rt3.select("gemm", d, 4, backend="pallas")
+    assert rt3.stats.model_evals == 0                # pure warm start
+
+
+def test_artifact_version_survives_delete_and_reinstall(tmp_path, tuned):
+    """versions.json is the authority: deleting the artifact file must not
+    reset the counter (a re-install after cleanup must still invalidate
+    caches stamped by the deleted generation)."""
+    reg = ModelRegistry(tmp_path)
+    reg.save(tuned)
+    v = tuned.artifact_version
+    from repro.core.registry import artifact_name
+    (tmp_path / artifact_name(tuned)).unlink()
+    reg.save(tuned)
+    assert tuned.artifact_version == v + 1
+
+
+def test_unstamped_artifacts_keep_legacy_cache_semantics(tmp_path):
+    """Subroutines never saved through a registry (version 0) interop with
+    caches that carry no version — nothing is dropped."""
+    rt = AdsalaRuntime()
+    rt.register(GenSub("b0", 0))
+    rt.select("gemm", (32, 32, 32), 4, backend="b0")
+    entries = rt.export_cache()
+    assert entries[0]["artifact_version"] == 0
+    warm = AdsalaRuntime()
+    warm.register(GenSub("b0", 0))
+    assert warm.import_cache(entries) == 1
+    assert warm.stats.import_drops_version == 0
+
+
+# ---------------------------------------------------------------------------
+# the Retuner
+# ---------------------------------------------------------------------------
+
+def drive(rt, ret, dims_pool, measured_fn, *, backend="pallas", items=2):
+    """Serve + report one telemetry tick for every pool bucket."""
+    for d in dims_pool:
+        k = rt.select("gemm", d, 4, backend=backend)
+        rt.record_batch("gemm", d, 4, backend, 1,
+                        exec_seconds=measured_fn(d, k) * items,
+                        exec_items=items)
+    return ret.observe()
+
+
+def test_retuner_no_false_trigger(tuned):
+    rt = AdsalaRuntime()
+    rt.register(tuned)
+    ret = Retuner(rt, config=RetuneConfig(min_samples=2))
+    cp = rt.predictor("gemm", 4, backend="pallas")
+    pool = [(32, 32, 32), (64, 32, 64), (48, 64, 32)]
+    space = tuned.knob_space
+    added = drive(rt, ret, pool,
+                  lambda d, k: float(cp.predict_times(d)[space.index(k)]))
+    assert added == len(pool)
+    assert ret.step() == []
+    ewma, n = ret.drift("gemm", 4, "pallas")
+    assert n == len(pool) and ewma == pytest.approx(0.0, abs=1e-12)
+    assert ret.stats.retunes == 0 and ret.stats.drift_events == 0
+
+
+def test_retuner_detects_drift_and_swaps_without_registry(tuned):
+    rt = AdsalaRuntime()
+    rt.register(tuned)
+    ret = Retuner(rt, config=RetuneConfig(min_samples=3, drift_threshold=0.5,
+                                          tune_trials=1))
+    cp = rt.predictor("gemm", 4, backend="pallas")
+    space = tuned.knob_space
+    pool = [(32, 32, 32), (64, 32, 64), (48, 64, 32), (64, 64, 64)]
+    drive(rt, ret, pool,
+          lambda d, k: 3.0 * float(cp.predict_times(d)[space.index(k)]))
+    ewma, _ = ret.drift("gemm", 4, "pallas")
+    assert ewma == pytest.approx(2.0, rel=1e-6)      # |3p - p| / p
+    swapped = ret.step()
+    assert swapped == [("pallas", "gemm", 4)]
+    new_sub = rt.subroutine("gemm", 4, backend="pallas")
+    assert new_sub is not tuned
+    # no registry → local monotonic bump off the old artifact's version
+    assert new_sub.artifact_version == tuned.artifact_version + 1
+    assert rt.stats.swaps == 1
+    assert ret.stats.retunes == 1 and ret.stats.errors == 0
+    # state reset: the new model starts with a clean drift signal
+    assert ret.drift("gemm", 4, "pallas") == (None, 0)
+
+
+def test_retuner_telemetry_is_keyed_and_capped(tuned):
+    """Re-measuring a bucket REPLACES its sample (stale pre-drift telemetry
+    must not feed the refit) and the ring is bounded."""
+    rt = AdsalaRuntime()
+    rt.register(tuned)
+    ret = Retuner(rt, config=RetuneConfig(telemetry_cap=3, min_samples=1,
+                                          drift_threshold=1e9))
+    pool = [(32 * i, 32, 32) for i in range(1, 6)]       # 5 buckets, cap 3
+    drive(rt, ret, pool, lambda d, k: 1e-3)
+    st = ret._state[("pallas", "gemm", 4)]
+    assert len(st.samples) == 3                          # capped
+    # re-measure the newest bucket with a new value: replaced, not appended
+    d = pool[-1]
+    k = rt.select("gemm", d, 4, backend="pallas")
+    rt.record_batch("gemm", d, 4, "pallas", 1,
+                    exec_seconds=4e-3, exec_items=2)
+    ret.observe()
+    assert len(st.samples) == 3
+    idx = tuned.knob_space.index(k)
+    assert st.samples[(d, idx)] == pytest.approx(2e-3)   # the NEW value
+
+
+def test_retuner_retune_without_telemetry_raises(tuned):
+    rt = AdsalaRuntime()
+    rt.register(tuned)
+    ret = Retuner(rt)
+    with pytest.raises(RuntimeError, match="no telemetry"):
+        ret.retune(("pallas", "gemm", 4))
+
+
+def test_retuner_refit_follows_measured_surface(tuned, tmp_path):
+    """After a drift that flips the cost ordering, the refit model's
+    decisions must move off the drifted knob, and the swap must be
+    bit-identical to a fresh process loading the saved artifact."""
+    reg = ModelRegistry(tmp_path)
+    reg.save(tuned)
+    v_installed = tuned.artifact_version
+    rt = AdsalaRuntime()
+    rt.register(tuned)
+    ret = Retuner(rt, registry=reg,
+                  config=RetuneConfig(min_samples=3, drift_threshold=0.5,
+                                      tune_trials=1))
+    cp = rt.predictor("gemm", 4, backend="pallas")
+    space = tuned.knob_space
+    pool = [(32, 32, 32), (64, 32, 64), (48, 64, 32), (64, 64, 64)]
+    drive(rt, ret, pool,
+          lambda d, k: 4.0 * float(cp.predict_times(d)[space.index(k)]))
+    assert ret.step() == [("pallas", "gemm", 4)]
+    new_sub = rt.subroutine("gemm", 4, backend="pallas")
+    assert new_sub.artifact_version == v_installed + 1
+
+    fresh = AdsalaRuntime()
+    fresh.register(reg.load_all(backend="pallas")[0])
+    live_cp = rt.predictor("gemm", 4, backend="pallas")
+    fresh_cp = fresh.predictor("gemm", 4, backend="pallas")
+    for d in pool:
+        assert np.array_equal(live_cp.predict_times(d),
+                              fresh_cp.predict_times(d))
+        assert rt.select("gemm", d, 4, backend="pallas") == \
+            fresh.select("gemm", d, 4, backend="pallas")
+
+
+def test_retuner_background_thread_start_stop(tuned):
+    rt = AdsalaRuntime()
+    rt.register(tuned)
+    ret = Retuner(rt, config=RetuneConfig(min_samples=2, drift_threshold=0.5,
+                                          interval_s=0.02, tune_trials=1))
+    cp = rt.predictor("gemm", 4, backend="pallas")
+    space = tuned.knob_space
+    pool = [(32, 32, 32), (64, 32, 64), (48, 64, 32)]
+    for d in pool:
+        k = rt.select("gemm", d, 4, backend="pallas")
+        rt.record_batch("gemm", d, 4, "pallas", 1,
+                        exec_seconds=3.0 * float(
+                            cp.predict_times(d)[space.index(k)]) * 2,
+                        exec_items=2)
+    ret.start()
+    ret.start()                                      # idempotent
+    deadline = time.monotonic() + 30
+    while ret.stats.retunes == 0 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    ret.stop()
+    ret.stop()                                       # idempotent
+    assert ret.stats.retunes >= 1 and ret.stats.errors == 0
+    assert rt.stats.swaps >= 1
+
+
+# ---------------------------------------------------------------------------
+# serving integration: queue/exec split + service-managed retuner
+# ---------------------------------------------------------------------------
+
+def test_serving_splits_queue_and_exec_time():
+    from repro.backends import get_backend
+    rt = AdsalaRuntime()
+    cfg = ServeConfig(backend="ref", max_batch=8, linger_ms=2.0)
+    dims = (48, 32, 40)
+    operands = get_backend("ref").make_operands("gemm", dims, np.float32,
+                                                seed=0)
+    with BlasService(runtime=rt, config=cfg) as svc:
+        futs = [svc.submit("gemm", operands) for _ in range(12)]
+        for f in futs:
+            f.result(timeout=30)
+        stats = svc.stats
+    assert stats.exec_sum > 0.0 and stats.queue_sum > 0.0
+    assert stats.mean_exec_latency > 0.0 and stats.mean_queue_latency > 0.0
+    key = bucket_key("gemm", [a.shape for a in operands],
+                     [a.dtype for a in operands], "ref")
+    backend, op, dtype_bytes, dims_key = key[0], key[1], key[2], key[3]
+    b = rt.stats.buckets[(backend, op, dtype_bytes, dims_key)]
+    assert b.exec_items == 12
+    assert b.exec_seconds > 0.0
+    assert b.mean_exec_per_item == pytest.approx(
+        b.exec_seconds / b.exec_items)
+    # queue time is tracked separately — it must NOT inflate exec time
+    assert b.queue_seconds >= 0.0
+    assert b.mean_queue >= 0.0
+
+
+def test_service_starts_and_stops_retuner(tuned):
+    rt = AdsalaRuntime()
+    rt.register(tuned)
+    ret = Retuner(rt, config=RetuneConfig(interval_s=0.05))
+    cfg = ServeConfig(backend="ref", max_batch=4, linger_ms=2.0)
+    with BlasService(runtime=rt, config=cfg, retuner=ret) as svc:
+        assert svc.retuner is ret
+        assert ret._thread is not None and ret._thread.is_alive()
+    assert ret._thread is None or not ret._thread.is_alive()

@@ -63,12 +63,35 @@ def test_stats_consistent_under_concurrent_mixed_backend_load():
         except Exception as e:   # noqa: BLE001
             errors.append(e)
 
+    # a stats reader races the workers: model_evals and eval_seconds are
+    # updated together under the shard lock, so a snapshot must never show
+    # the count without the time (the torn-read signature of reading the
+    # pair lock-free)
+    stop_reading = threading.Event()
+
+    def stats_reader():
+        try:
+            while not stop_reading.is_set():
+                s = rt.stats
+                for name, b in s.backends.items():
+                    if b.model_evals > 0:
+                        assert b.eval_seconds > 0.0, \
+                            f"{name}: torn evals/seconds snapshot"
+                if s.model_evals > 0:
+                    assert s.eval_seconds > 0.0
+        except Exception as e:   # noqa: BLE001
+            errors.append(e)
+
+    reader = threading.Thread(target=stats_reader)
+    reader.start()
     threads = [threading.Thread(target=worker, args=(t,))
                for t in range(n_threads)]
     for t in threads:
         t.start()
     for t in threads:
         t.join()
+    stop_reading.set()
+    reader.join()
     assert not errors
 
     s = rt.stats
@@ -185,7 +208,7 @@ def test_decision_cache_persists_via_registry(tmp_path):
     path = reg.save_decision_cache(rt)
     assert path == tmp_path / ModelRegistry.DECISION_CACHE
     payload = json.loads(path.read_text())
-    assert payload["version"] == 1 and len(payload["entries"]) == 1
+    assert payload["version"] == 2 and len(payload["entries"]) == 1
 
     warm = AdsalaRuntime()
     warm.register(StubSub("b0"))
