@@ -1,0 +1,356 @@
+#!/usr/bin/env python
+"""Chaos harness: seeded fault scenarios against the resilient serving stack.
+
+Drives the failure paths of the serving layer (``repro.serving``) with a
+deterministic :class:`FaultPlan` — no real crashes, no wall-clock races —
+and checks the resilience *contract* end to end:
+
+  1. **kernel crash storm** — every accelerator rung (pallas, cpu_blocked)
+     crashes at launch, for every op: the degradation ladder must land each
+     bucket on ``ref``, every future must resolve, and the served results
+     must be **bit-identical** to a clean stacked ref run of the same width;
+  2. **poisoned knob** — the model's selected knob crashes every attempt
+     while the backend's default config runs clean: the crash must be
+     pinned on the knob (TTL'd quarantine), the bucket served on the SAME
+     backend by the default-knob probe, the quarantined knob never cached
+     while the breaker is open, and the model's own pick served again after
+     the TTL (half-open recovery);
+  3. **worker death** — an injected raise after a bucket is claimed kills
+     the worker thread: the supervisor must respawn it and requeue the
+     claimed bucket with zero request loss;
+  4. **artifact-load failure** — one corrupt artifact and one injected load
+     fault must not abort registry hydration: the healthy artifact loads,
+     both casualties are recorded, and a later retry recovers;
+  5. **retuner refit failure** — a drift-triggered refit raises: the loop
+     must count the failure, keep serving the old model, and complete the
+     retune on the next step once the fault clears.
+
+Every metric is structural (pass/fail counts and flags) and the plan is
+seeded, so a scenario replays bit-for-bit on any host.  The committed
+trajectory lives in ``BENCH_chaos.json`` and is gated exactly by
+``scripts/bench_diff.py --chaos-fresh``.
+
+    PYTHONPATH=src python benchmarks/chaos_bench.py --smoke
+    PYTHONPATH=src python benchmarks/chaos_bench.py --json /tmp/c.json
+    PYTHONPATH=src python benchmarks/chaos_bench.py --record pr8
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.backends import get_backend  # noqa: E402
+from repro.core import (AdsalaRuntime, ModelRegistry,  # noqa: E402
+                        install_subroutine)
+from repro.kernels import ops  # noqa: E402
+from repro.kernels.ops import run_op  # noqa: E402
+from repro.serving import (BlasService, FaultPlan, FaultSpec,  # noqa: E402
+                           Retuner, RetuneConfig, ServeConfig)
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_chaos.json"
+
+OPS = ("gemm", "symm", "syrk", "syr2k", "trmm", "trsm")
+DIMS = {"gemm": (16, 16, 16), "symm": (16, 16), "syrk": (16, 16),
+        "syr2k": (16, 16), "trmm": (16, 16), "trsm": (16, 16)}
+
+
+def make(op, dims, seed=0):
+    return get_backend("ref").make_operands(op, dims, np.float32, seed=seed)
+
+
+class _FixedSub:
+    """Stub subroutine whose "model" always picks one fixed knob."""
+
+    def __init__(self, knob, backend, op="gemm", dtype_bytes=4):
+        self.backend, self.op, self.dtype_bytes = backend, op, dtype_bytes
+        self.knob = knob
+        self.artifact_version = 0
+
+    def select(self, dims):
+        return self.knob
+
+
+def _track(futures_seen, futs):
+    futures_seen.extend(futs)
+    return futs
+
+
+# ---------------------------------------------------------------------------
+# scenarios
+# ---------------------------------------------------------------------------
+
+def scenario_crash_storm(n_per_op: int, seed: int, futures_seen: list) -> dict:
+    """Every accelerator launch crashes → all buckets land on ref,
+    bit-identical to a clean stacked ref run of the same width."""
+    plan = FaultPlan([FaultSpec(site="kernel_execute", times=None,
+                                match=lambda c: c["backend"] != "ref")],
+                     seed=seed)
+    rt = AdsalaRuntime(faults=plan)
+    cfg = ServeConfig(backend="pallas", max_batch=n_per_op, linger_ms=1.0,
+                      workers=2, min_steal=n_per_op, exec_retries=0,
+                      retry_backoff_s=0.0)
+    reqs = {op: [make(op, DIMS[op], seed=i) for i in range(n_per_op)]
+            for op in OPS}
+    with BlasService(runtime=rt, config=cfg, faults=plan) as svc:
+        futs = {op: _track(futures_seen,
+                           [svc.submit(op, r) for r in reqs[op]])
+                for op in OPS}
+        outs = {op: [np.asarray(f.result(timeout=120)) for f in futs[op]]
+                for op in OPS}
+    bit_identical = True
+    for op in OPS:
+        stacked = tuple(np.stack([r[i] for r in reqs[op]])
+                        for i in range(len(reqs[op][0])))
+        clean = np.asarray(run_op(op, stacked, backend="ref", stacked=True))
+        for i, out in enumerate(outs[op]):
+            if not np.array_equal(out, clean[i]):
+                bit_identical = False
+    return {
+        "crash_storm_failed": int(svc.stats.failed),
+        "crash_storm_completed": int(svc.stats.completed),
+        "crash_storm_bit_identical": bool(bit_identical),
+        "crash_storm_fallback_executions":
+            int(svc.stats.fallback_executions),
+        "crash_storm_injected": int(plan.fired("kernel_execute")),
+    }
+
+
+def scenario_poisoned_knob(seed: int, futures_seen: list) -> dict:
+    """The selected knob crashes, the default runs clean → quarantine the
+    knob, serve on the same backend, recover the model's pick after TTL."""
+    be = get_backend("cpu_blocked")
+    default = be.default_knob("gemm")
+    bad = next(c for c in be.knob_space("gemm").candidates if c != default)
+    plan = FaultPlan([FaultSpec(site="kernel_execute", times=None,
+                                match=lambda c: c.get("knob") == bad)],
+                     seed=seed)
+    rt = AdsalaRuntime(faults=plan)
+    rt.register(_FixedSub(bad, "cpu_blocked"))
+    cfg = ServeConfig(backend="cpu_blocked", max_batch=4, linger_ms=1.0,
+                      workers=1, min_steal=4, exec_retries=0,
+                      retry_backoff_s=0.0, quarantine_ttl_s=0.3)
+    reqs = [make("gemm", (16, 16, 16), seed=i) for i in range(4)]
+    with BlasService(runtime=rt, config=cfg, faults=plan) as svc:
+        futs = _track(futures_seen, [svc.submit("gemm", r) for r in reqs])
+        outs = [np.asarray(f.result(timeout=120), np.float64) for f in futs]
+    served_correct = all(
+        np.max(np.abs(out - np.asarray(r[0] @ r[1], np.float64)))
+        / (np.max(np.abs(np.asarray(r[0] @ r[1], np.float64))) + 1e-9)
+        < 5e-4 for r, out in zip(reqs, outs))
+    quarantined = rt.is_quarantined("gemm", 4, "cpu_blocked", bad)
+    # while the breaker is open: forced to the fallback, never cached
+    forced = rt.select("gemm", (16, 16, 16), 4, backend="cpu_blocked")
+    not_cached = rt.peek("gemm", (16, 16, 16), 4,
+                         backend="cpu_blocked") is None
+    time.sleep(0.4)                  # past the TTL: breaker half-opens
+    recovered = rt.select("gemm", (16, 16, 16), 4,
+                          backend="cpu_blocked") == bad
+    return {
+        "poisoned_knob_quarantined": bool(
+            quarantined and svc.stats.quarantined_knobs == 1),
+        "poisoned_knob_served_correct": bool(
+            served_correct and svc.stats.failed == 0),
+        "poisoned_knob_same_backend": bool(
+            svc.stats.fallback_executions == 0),
+        "quarantine_forces_fallback": bool(forced == default),
+        "quarantine_not_cached_while_open": bool(not_cached),
+        "recovery_after_ttl": bool(recovered),
+    }
+
+
+def scenario_worker_death(n: int, seed: int, futures_seen: list) -> dict:
+    """A claimed bucket's worker dies → supervisor respawns the thread and
+    requeues the bucket; zero request loss."""
+    plan = FaultPlan([FaultSpec(site="worker", times=1)], seed=seed)
+    cfg = ServeConfig(backend="ref", max_batch=n, linger_ms=1.0, workers=2,
+                      min_steal=n)
+    reqs = [make("gemm", (16, 16, 16), seed=i) for i in range(n)]
+    with BlasService(runtime=AdsalaRuntime(), config=cfg,
+                     faults=plan) as svc:
+        futs = _track(futures_seen, [svc.submit("gemm", r) for r in reqs])
+        outs = [np.asarray(f.result(timeout=120), np.float64) for f in futs]
+    correct = all(
+        np.max(np.abs(out - np.asarray(r[0] @ r[1], np.float64)))
+        / (np.max(np.abs(np.asarray(r[0] @ r[1], np.float64))) + 1e-9)
+        < 5e-4 for r, out in zip(reqs, outs))
+    return {
+        "worker_death_no_loss": bool(
+            correct and svc.stats.completed == n and svc.stats.failed == 0
+            and plan.fired("worker") == 1),
+        "worker_respawns": int(svc.stats.worker_respawns),
+    }
+
+
+def scenario_artifact_load(n_samples: int, seed: int) -> dict:
+    """One corrupt artifact + one injected load fault: hydration survives,
+    records both casualties, and a retry recovers the injected one."""
+    space = ops.knob_space_for("gemm", sizes=(32, 64))
+    sub = install_subroutine(
+        "gemm", space, lambda dims, knob: 1e-3, n_samples=n_samples,
+        dim_lo=32, dim_hi=64, max_footprint_bytes=1_000_000, tune_trials=1,
+        candidates=("LinearRegression",), use_lof=False, seed=seed,
+        backend="pallas")
+    plan = FaultPlan([FaultSpec(site="artifact_load", times=1)], seed=seed)
+    with tempfile.TemporaryDirectory() as td:
+        reg = ModelRegistry(td, faults=plan)
+        reg.save(sub)
+        (Path(td) / "pallas__zzz_b4.adsala").write_bytes(b"not msgpack")
+        rt = AdsalaRuntime()
+        first = reg.load_into(rt)
+        first_errors = len(reg.last_load_errors)
+        retry = reg.load_into(rt)
+        retry_errors = len(reg.last_load_errors)
+        return {
+            "artifact_load_isolated": bool(
+                first == 0 and first_errors == 2
+                and retry == 1 and retry_errors == 1
+                and rt.has("gemm", 4, "pallas")),
+        }
+
+
+def scenario_retuner_refit(n_samples: int, seed: int) -> dict:
+    """Drift-triggered refit raises once: counted, old model keeps serving,
+    the NEXT step completes the retune."""
+    pool = [(32, 32, 32), (48, 32, 64), (64, 48, 32), (32, 64, 48)]
+    space = ops.knob_space_for("gemm", sizes=(32, 64))
+    sub = install_subroutine(
+        "gemm", space, lambda dims, knob: 1e-3, n_samples=n_samples,
+        dim_lo=32, dim_hi=64, max_footprint_bytes=1_000_000, tune_trials=1,
+        candidates=("LinearRegression",), use_lof=False, seed=seed,
+        backend="pallas")
+    plan = FaultPlan([FaultSpec(site="retuner_refit", times=1)], seed=seed)
+    rt = AdsalaRuntime()
+    rt.register(sub)
+    ret = Retuner(rt, config=RetuneConfig(min_samples=len(pool),
+                                          tune_trials=1, seed=seed),
+                  faults=plan)
+    before = {d: rt.select("gemm", d, 4, backend="pallas") for d in pool}
+    for d in pool:                   # measured 4x the (flat) prediction
+        rt.record_batch("gemm", d, 4, "pallas", 1, exec_seconds=4e-3,
+                        exec_items=1)
+    first = ret.step()               # refit raises: counted, survived
+    survived = (first == [] and ret.stats.refit_failures == 1
+                and ret.stats.retunes == 0)
+    during = {d: rt.select("gemm", d, 4, backend="pallas") for d in pool}
+    still_serving = during == before        # old model's decisions intact
+    second = ret.step()              # fault cleared: the retune completes
+    recovered = (second == [("pallas", "gemm", 4)]
+                 and ret.stats.retunes == 1)
+    return {
+        "refit_failure_survived": bool(survived),
+        "refit_served_old_model": bool(still_serving),
+        "refit_recovered_next_step": bool(recovered),
+    }
+
+
+def run_scenarios(*, n_per_op: int = 4, n_samples: int = 12,
+                  seed: int = 0) -> dict:
+    futures_seen: list = []
+    metrics: dict = {}
+    metrics.update(scenario_crash_storm(n_per_op, seed, futures_seen))
+    metrics.update(scenario_poisoned_knob(seed, futures_seen))
+    metrics.update(scenario_worker_death(max(4, n_per_op), seed,
+                                         futures_seen))
+    metrics.update(scenario_artifact_load(n_samples, seed))
+    metrics.update(scenario_retuner_refit(n_samples, seed))
+    # the headline contract: every future ever submitted has resolved
+    metrics["hung_futures"] = sum(not f.done() for f in futures_seen)
+    metrics["futures_submitted"] = len(futures_seen)
+    return metrics
+
+
+STRUCTURAL = (("crash_storm_failed", 0),
+              ("crash_storm_bit_identical", True),
+              ("poisoned_knob_quarantined", True),
+              ("poisoned_knob_served_correct", True),
+              ("poisoned_knob_same_backend", True),
+              ("quarantine_forces_fallback", True),
+              ("quarantine_not_cached_while_open", True),
+              ("recovery_after_ttl", True),
+              ("worker_death_no_loss", True),
+              ("artifact_load_isolated", True),
+              ("refit_failure_survived", True),
+              ("refit_served_old_model", True),
+              ("refit_recovered_next_step", True),
+              ("hung_futures", 0))
+
+
+def check(metrics: dict) -> list[str]:
+    """Structural pass/fail list (empty = healthy)."""
+    bad = [f"{k}={metrics[k]!r} (want {want!r})"
+           for k, want in STRUCTURAL if metrics[k] != want]
+    if metrics["crash_storm_fallback_executions"] < 1:
+        bad.append("crash_storm_fallback_executions=0 (want >=1)")
+    if metrics["worker_respawns"] < 1:
+        bad.append("worker_respawns=0 (want >=1)")
+    return bad
+
+
+def record_entry(entry_id: str, payload: dict, path: Path = BENCH_PATH):
+    from common import record_trajectory_entry    # script-mode only module
+    record_trajectory_entry(path, "chaos", entry_id, payload)
+    print(f"[chaos_bench] recorded entry {entry_id!r} -> {path}")
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--per-op", type=int, default=8,
+                   help="requests per op in the crash storm")
+    p.add_argument("--samples", type=int, default=24,
+                   help="install-sweep Halton samples for the artifact/"
+                        "retuner scenarios")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--smoke", action="store_true",
+                   help="small preset for CI (4 per op, 12 samples)")
+    p.add_argument("--json", type=Path, default=None,
+                   help="write metrics JSON here (bench_diff --chaos-fresh "
+                        "input)")
+    p.add_argument("--record", default=None, metavar="ENTRY",
+                   help="append/refresh this entry in the committed "
+                        "BENCH_chaos.json trajectory")
+    args = p.parse_args(argv)
+    if args.smoke:
+        args.per_op, args.samples = 4, 12
+
+    metrics = run_scenarios(n_per_op=args.per_op, n_samples=args.samples,
+                            seed=args.seed)
+    for k, v in metrics.items():
+        print(f"  {k:>36}: {v}")
+    bad = check(metrics)
+
+    if args.json is not None:
+        args.json.write_text(json.dumps(
+            {"summary": metrics, "smoke_baseline": metrics}, indent=1))
+        print(f"[chaos_bench] wrote {args.json}")
+    if args.record is not None:
+        record_entry(args.record, {
+            "host": {"platform": platform.platform(),
+                     "python": platform.python_version()},
+            "config": {"per_op": args.per_op, "samples": args.samples,
+                       "seed": args.seed},
+            "smoke_baseline": metrics,
+        })
+
+    if bad:
+        print(f"[chaos_bench] FAILED: {'; '.join(bad)}")
+        return 1
+    print(f"[chaos_bench] OK — {metrics['futures_submitted']} futures all "
+          f"resolved, {metrics['crash_storm_injected']} injected crashes "
+          f"absorbed, knob quarantined + recovered after TTL, "
+          f"{metrics['worker_respawns']} worker respawn(s), retuner refit "
+          f"failure survived")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -37,6 +37,13 @@ Three trajectories:
     must reject the pre-swap decision cache.  All structural/deterministic
     (synthetic cost surface, no wall clock); only the p50 cost-recovery
     ratio gets the standard tolerance gate.
+  * ``BENCH_chaos.json`` (gated when ``--chaos-fresh`` is given): the
+    fault-injection resilience contract — every submitted future resolves
+    (zero hung), crash storms degrade to bit-identical ref results, a
+    poisoned knob is quarantined and recovers after its TTL, worker deaths
+    lose no requests, artifact-load faults stay isolated, and a failed
+    refit survives and completes on the next step.  All structural flags,
+    compared exact — the scenarios are seeded and deterministic.
 
     PYTHONPATH=src python scripts/bench_diff.py
     PYTHONPATH=src python scripts/bench_diff.py --fresh /tmp/smoke.json \
@@ -60,6 +67,7 @@ SERVING_PATH = REPO_ROOT / "BENCH_serving.json"
 KERNELS_PATH = REPO_ROOT / "BENCH_kernels.json"
 MODEL_PATH = REPO_ROOT / "BENCH_model.json"
 RETUNE_PATH = REPO_ROOT / "BENCH_retune.json"
+CHAOS_PATH = REPO_ROOT / "BENCH_chaos.json"
 
 #: summary-level ratios under the standard (--tolerance) gate
 GATED_SUMMARY = ("cold_median_speedup", "batch_speedup")
@@ -80,7 +88,9 @@ _RECORDERS = {"decision": "benchmarks/decision_bench.py (full mode)",
               "kernels": "benchmarks/kernel_bench.py --record <entry>",
               "model": "benchmarks/model_bench.py --record <entry>",
               "retune": "benchmarks/retune_bench.py --smoke --record "
-                        "<entry>"}
+                        "<entry>",
+              "chaos": "benchmarks/chaos_bench.py --smoke --record "
+                       "<entry>"}
 
 
 def committed_baseline(path: Path) -> tuple[str, dict]:
@@ -245,6 +255,31 @@ def gate_retune(fresh_json: Path, bench: Path, tolerance: float,
             failures.append(f"retune.recovery_p50 (vs {entry_id})")
 
 
+def gate_chaos(fresh_json: Path, bench: Path, failures: list) -> None:
+    """Fault-injection resilience contract: every structural flag of the
+    chaos scenarios compared EXACT against the bench's own pass criteria
+    (the committed entry is provenance, not a tolerance baseline — the
+    scenarios are seeded and deterministic, so any drift is a code change)."""
+    import chaos_bench
+    entry_id, _base = committed_baseline(bench)
+    data = json.loads(fresh_json.read_text())
+    fresh = data.get("smoke_baseline") or data["summary"]
+    for key, want in chaos_bench.STRUCTURAL:
+        got = fresh.get(key)
+        ok = got == want
+        print(f"[bench_diff] {'ok ' if ok else 'REG'} chaos.{key}: "
+              f"{got!r} (must be {want!r})")
+        if not ok:
+            failures.append(f"chaos.{key} (vs {entry_id})")
+    for key in ("crash_storm_fallback_executions", "worker_respawns"):
+        got = fresh.get(key, 0)
+        ok = got >= 1
+        print(f"[bench_diff] {'ok ' if ok else 'REG'} chaos.{key}: "
+              f"{got} (must be >=1)")
+        if not ok:
+            failures.append(f"chaos.{key}")
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--bench", type=Path, default=BENCH_PATH,
@@ -273,6 +308,11 @@ def main(argv=None) -> int:
                         "--json PATH); gates BENCH_retune.json when given")
     p.add_argument("--retune-bench", type=Path, default=RETUNE_PATH,
                    help="committed online-retune trajectory file")
+    p.add_argument("--chaos-fresh", type=Path, default=None,
+                   help="fresh chaos metrics (chaos_bench --smoke --json "
+                        "PATH); gates BENCH_chaos.json when given")
+    p.add_argument("--chaos-bench", type=Path, default=CHAOS_PATH,
+                   help="committed chaos trajectory file")
     p.add_argument("--tolerance", type=float, default=0.25,
                    help="allowed fractional regression per metric")
     args = p.parse_args(argv)
@@ -315,6 +355,8 @@ def main(argv=None) -> int:
     if args.retune_fresh is not None:
         gate_retune(args.retune_fresh, args.retune_bench,
                     args.tolerance, failures)
+    if args.chaos_fresh is not None:
+        gate_chaos(args.chaos_fresh, args.chaos_bench, failures)
 
     if failures:
         print(f"[bench_diff] FAILED vs entry {entry_id!r}: "

@@ -13,14 +13,16 @@ from .base import Backend, L3_OPS
 from .cpu import CpuBlockedBackend
 from .pallas import PallasBackend
 from .ref import RefBackend
-from .registry import (FALLBACK_BACKEND, available_backends, fallback_chain,
-                       get_backend, register_backend, resolve_backend,
-                       unregister_backend)
+from .registry import (FALLBACK_BACKEND, available_backends,
+                       degradation_chain, fallback_chain, fallback_counts,
+                       get_backend, register_backend, reset_fallback_counts,
+                       resolve_backend, unregister_backend)
 
 __all__ = [
     "Backend", "L3_OPS", "RefBackend", "CpuBlockedBackend", "PallasBackend",
     "register_backend", "unregister_backend", "get_backend",
     "available_backends", "resolve_backend", "fallback_chain",
+    "degradation_chain", "fallback_counts", "reset_fallback_counts",
     "FALLBACK_BACKEND",
 ]
 

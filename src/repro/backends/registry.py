@@ -15,10 +15,17 @@ from .base import Backend
 
 __all__ = ["register_backend", "unregister_backend", "get_backend",
            "available_backends", "resolve_backend", "fallback_chain",
-           "FALLBACK_BACKEND"]
+           "degradation_chain", "fallback_counts", "count_fallback",
+           "reset_fallback_counts", "FALLBACK_BACKEND"]
 
 #: terminal element of every fallback chain — must always be registered
 FALLBACK_BACKEND = "ref"
+
+#: execution-time degradation preference (the serving resilience ladder):
+#: a failing backend is retried down this order, requested backend first,
+#: then every *later* entry, then the always-executable ``ref`` terminal —
+#: pallas degrades through cpu_blocked before giving up the knobs entirely
+DEGRADE_ORDER = ("pallas", "cpu_blocked")
 
 _REGISTRY: dict[str, Backend] = {}
 
@@ -30,6 +37,31 @@ _REGISTRY: dict[str, Backend] = {}
 _GENERATION = 0
 _RESOLVE_MEMO: dict[str, tuple[int, Backend]] = {}
 _MUTATE_LOCK = threading.Lock()
+
+#: resolve-time fallback accounting: (requested, resolved) -> count.  A
+#: request silently degrading pallas→ref at resolution used to be invisible
+#: in production — the numbers are surfaced through
+#: ``AdsalaRuntime.stats.resolve_fallbacks`` so a fleet dashboard can tell
+#: "pallas is serving" from "pallas is gone and ref is covering for it".
+_FALLBACK_COUNTS: dict[tuple[str, str], int] = {}
+_FALLBACK_LOCK = threading.Lock()
+
+
+def count_fallback(requested: str, resolved: str) -> None:
+    with _FALLBACK_LOCK:
+        key = (requested, resolved)
+        _FALLBACK_COUNTS[key] = _FALLBACK_COUNTS.get(key, 0) + 1
+
+
+def fallback_counts() -> dict[tuple[str, str], int]:
+    """Snapshot of resolve-time fallbacks per (requested, resolved) pair."""
+    with _FALLBACK_LOCK:
+        return dict(_FALLBACK_COUNTS)
+
+
+def reset_fallback_counts() -> None:
+    with _FALLBACK_LOCK:
+        _FALLBACK_COUNTS.clear()
 
 
 def register_backend(backend: Backend, *, overwrite: bool = False) -> Backend:
@@ -66,6 +98,23 @@ def fallback_chain(name: str) -> tuple[str, ...]:
     return (name,) if name == FALLBACK_BACKEND else (name, FALLBACK_BACKEND)
 
 
+def degradation_chain(name: str) -> tuple[str, ...]:
+    """The *execution-time* retry order for a backend whose launch failed:
+    the requested backend, then every registered :data:`DEGRADE_ORDER`
+    backend strictly after it, then the ``ref`` terminal.  A backend
+    outside the order (``ref`` itself, custom plugins) degrades straight to
+    ``ref`` — never *up* onto an accelerator path it did not ask for.
+    Unlike the resolve-time :func:`fallback_chain` (availability at
+    dispatch), this chain is walked only by the serving resilience ladder
+    after a launch *crashed*."""
+    order = [b for b in DEGRADE_ORDER if b in _REGISTRY]
+    tail = order[order.index(name) + 1:] if name in order else []
+    chain = [name] + [b for b in tail if b != name]
+    if FALLBACK_BACKEND not in chain:
+        chain.append(FALLBACK_BACKEND)
+    return tuple(chain)
+
+
 def resolve_backend(backend: str | Backend | None) -> Backend:
     """Requested backend → ref fallback; raises only if even ``ref`` is gone.
 
@@ -90,6 +139,10 @@ def resolve_backend(backend: str | Backend | None) -> Backend:
         if be is not None and be.is_available():
             if name == requested:
                 _RESOLVE_MEMO[requested] = (gen, be)
+            else:
+                # silent degradation made visible: every resolve-time
+                # fallback is counted per (requested, resolved) pair
+                count_fallback(requested, name)
             return be
     raise KeyError(f"no executable backend for {backend!r} "
                    f"(registered: {available_backends()})")

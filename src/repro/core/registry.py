@@ -152,9 +152,14 @@ class ModelRegistry:
     #: reinstall of a model file — versions never move backwards.
     VERSIONS = "versions.json"
 
-    def __init__(self, root: str | Path) -> None:
+    def __init__(self, root: str | Path, *, faults=None) -> None:
         self.root = Path(root)
         self._version_lock = threading.Lock()
+        #: optional repro.serving.faults.FaultPlan (chaos harness)
+        self._faults = faults
+        #: (path, error) pairs from the most recent :meth:`load_into` —
+        #: artifacts that failed to load and were skipped
+        self.last_load_errors: list[tuple[str, str]] = []
 
     @property
     def versions_path(self) -> Path:
@@ -215,11 +220,30 @@ class ModelRegistry:
         """Hydrate ``runtime`` with every (matching) artifact.  Each
         ``register`` compiles the artifact's fast-path predictor up front,
         so a served process pays the fold cost at startup, not on its
-        first uncached call."""
-        subs = self.load_all(backend)
-        for s in subs:
-            runtime.register(s)
-        return len(subs)
+        first uncached call.
+
+        Per-artifact fault isolation: one corrupt/unreadable artifact is
+        skipped (recorded in :attr:`last_load_errors`) instead of aborting
+        the whole hydration — the runtime serves the models that DID load
+        and falls back to default knobs for the one that didn't.  Returns
+        the number of artifacts registered."""
+        self.last_load_errors = []
+        if not self.root.exists():
+            return 0
+        paths = sorted(self.root.glob("*.adsala"))
+        if backend is not None:
+            paths = [p for p in paths if _artifact_backend(p) == backend]
+        n = 0
+        for p in paths:
+            try:
+                if self._faults is not None:
+                    self._faults.fire("artifact_load", path=str(p))
+                runtime.register(load_subroutine(p))
+                n += 1
+            except Exception as e:       # noqa: BLE001 — skip, keep loading
+                self.last_load_errors.append(
+                    (str(p), f"{type(e).__name__}: {e}"))
+        return n
 
     # -- warm-start decision cache -------------------------------------------
     #: filename of the persisted runtime decision cache (beside the models)

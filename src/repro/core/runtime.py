@@ -53,6 +53,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import sys
 import threading
 import time
 
@@ -208,6 +209,22 @@ class RuntimeStats:
     #: entries they invalidated
     swaps: int = 0
     swap_invalidations: int = 0
+    #: knob quarantines opened (TTL'd circuit breakers on crashing knobs)
+    quarantines: int = 0
+    #: selections that re-chose a quarantined knob and were forced onto the
+    #: quarantine's fallback config instead
+    quarantine_forced: int = 0
+    #: import_cache entries rejected because their knob is under an active
+    #: quarantine (a crashing selection must not be resurrected by warm start)
+    import_drops_quarantine: int = 0
+    #: miss-path model evaluations that raised; select_or_default served the
+    #: caller's default config instead of failing the BLAS call
+    eval_failures: int = 0
+    #: process-global resolve-time backend fallbacks, per
+    #: (requested, resolved) pair (from repro.backends.registry) — how often
+    #: dispatch silently degraded, e.g. pallas→ref when pallas is absent
+    resolve_fallbacks: dict[tuple, int] = dataclasses.field(
+        default_factory=dict)
     backends: dict[str, BackendStats] = dataclasses.field(
         default_factory=dict)
     #: per shape-bucket serving stats, keyed (backend, op, dtype_bytes, dims)
@@ -244,8 +261,11 @@ class AdsalaRuntime:
 
     def __init__(self, *, cache_size: int = 256, fast_prune=False,
                  touch_sample: int = 16,
-                 fast_knn_coreset: bool = False) -> None:
+                 fast_knn_coreset: bool = False, faults=None) -> None:
         # paper's behaviour = cache_size 1 (last call only)
+        #: optional repro.serving.faults.FaultPlan; every site is guarded by
+        #: an `is not None` check so the disabled (default) path is free
+        self._faults = faults
         self._subs: dict[tuple[str, str, int], TunedSubroutine] = {}
         self._fast: dict[tuple[str, str, int], object] = {}
         self._shards: dict[tuple[str, str], _Shard] = {}
@@ -256,6 +276,13 @@ class AdsalaRuntime:
         # still RETURN the old decision (it was in flight when the swap
         # landed), but it can never repollute the invalidated cache
         self._swap_epochs: dict[tuple[str, str, int], int] = {}
+        # TTL'd knob circuit breakers: (backend, op, dtype_bytes, knob) ->
+        # (monotonic expiry deadline, forced fallback knob).  The cache
+        # never holds a quarantined knob (quarantine_knob invalidates, the
+        # miss path refuses to store one), so the lock-free HIT path needs
+        # no quarantine check at all — only miss-path evaluations consult
+        # this dict, and only when it is non-empty.
+        self._quarantined: dict[tuple, tuple[float, Knob]] = {}
         self._cache: collections.OrderedDict[tuple, Knob] = \
             collections.OrderedDict()      # authoritative LRU, lock-guarded
         self._cache_mirror: dict[tuple, Knob] = {}   # lock-free read mirror
@@ -308,6 +335,10 @@ class AdsalaRuntime:
                 import_drops_knob=base.import_drops_knob,
                 swaps=base.swaps,
                 swap_invalidations=base.swap_invalidations,
+                quarantines=base.quarantines,
+                quarantine_forced=base.quarantine_forced,
+                import_drops_quarantine=base.import_drops_quarantine,
+                eval_failures=base.eval_failures,
                 backends={n: dataclasses.replace(b)
                           for n, b in base.backends.items()},
                 buckets={k: dataclasses.replace(b)
@@ -328,6 +359,13 @@ class AdsalaRuntime:
                     b.calls += evals
                     b.model_evals += evals
                     b.eval_seconds += secs
+        # process-global resolve-time fallback counts (silent dispatch
+        # degradation, e.g. pallas→ref): read through sys.modules so the
+        # core package never *imports* the backends package — the counts
+        # simply stay empty until someone else has loaded it
+        reg = sys.modules.get("repro.backends.registry")
+        if reg is not None:
+            merged.resolve_fallbacks = reg.fallback_counts()
         return merged
 
     def _stripe(self) -> _HitStripe:
@@ -434,6 +472,127 @@ class AdsalaRuntime:
             self._base.swaps += 1
             self._base.swap_invalidations += len(stale)
         return len(stale)
+
+    # -- knob quarantine (TTL'd circuit breakers) -----------------------------
+    def quarantine_knob(self, op: str, dtype_bytes: int, backend: str,
+                        knob: Knob, *, fallback: Knob,
+                        ttl_s: float = 30.0) -> int:
+        """Open a TTL'd circuit breaker on one ``(backend, op, dtype, knob)``:
+        until the breaker half-opens (``ttl_s`` seconds of monotonic time),
+        every miss-path selection that re-chooses ``knob`` is forced onto
+        ``fallback`` instead, and the forced decision is never cached.  The
+        serving layer opens breakers on knob-specific kernel crashes — a
+        selection that takes the kernel down must not be served again the
+        moment the request is retried.
+
+        Cached decisions equal to ``knob`` are invalidated in the same
+        critical section that opens the breaker (returns how many), which is
+        what keeps the lock-free hit path free of quarantine checks: the
+        cache simply never contains a quarantined knob."""
+        fallback_knob = fallback
+        if fallback_knob == knob:
+            raise ValueError("quarantine fallback must differ from the "
+                             "quarantined knob")
+        sub_key = (backend, op, int(dtype_bytes))
+        with self._lock:
+            self._fold_touches_locked()
+            self._quarantined[sub_key + (knob,)] = \
+                (time.monotonic() + float(ttl_s), fallback_knob)
+            self._base.quarantines += 1
+            stale = [k for k, v in self._cache.items()
+                     if k[:3] == sub_key and v == knob]
+            for k in stale:
+                del self._cache[k]
+                self._cache_mirror.pop(k, None)
+        return len(stale)
+
+    def unquarantine(self, op: str, dtype_bytes: int, backend: str,
+                     knob: Knob) -> bool:
+        with self._lock:
+            return self._quarantined.pop(
+                (backend, op, int(dtype_bytes), knob), None) is not None
+
+    def is_quarantined(self, op: str, dtype_bytes: int, backend: str,
+                       knob: Knob) -> bool:
+        """True while the breaker is open; an elapsed TTL expires lazily
+        here (the probe itself half-opens the breaker)."""
+        qkey = (backend, op, int(dtype_bytes), knob)
+        with self._lock:
+            ent = self._quarantined.get(qkey)
+            if ent is None:
+                return False
+            if time.monotonic() >= ent[0]:
+                del self._quarantined[qkey]
+                return False
+            return True
+
+    def quarantined_knobs(self) -> dict[tuple, float]:
+        """Active breakers: (backend, op, dtype_bytes, knob) → remaining TTL
+        seconds.  Expired entries are reaped as a side effect."""
+        now = time.monotonic()
+        with self._lock:
+            for k in [k for k, (dl, _) in self._quarantined.items()
+                      if now >= dl]:
+                del self._quarantined[k]
+            return {k: dl - now for k, (dl, _) in self._quarantined.items()}
+
+    def _apply_quarantine(self, sub_key: tuple,
+                          knob: Knob) -> tuple[Knob, bool]:
+        """Miss-path filter: map a freshly evaluated knob through any active
+        breaker → ``(knob_to_serve, ok_to_store)``.  The no-breakers case
+        (always, in a healthy process) is one GIL-atomic emptiness check."""
+        if not self._quarantined:
+            return knob, True
+        qkey = sub_key + (knob,)
+        with self._lock:
+            ent = self._quarantined.get(qkey)
+            if ent is None:
+                return knob, True
+            if time.monotonic() >= ent[0]:
+                # TTL elapsed: half-open — serve the model's choice again
+                # (and cache it; a recurrence re-opens the breaker)
+                del self._quarantined[qkey]
+                return knob, True
+            self._base.quarantine_forced += 1
+            # the forced fallback is NOT stored: the cache must keep tempting
+            # the miss path to re-ask the model, so expiry is actually seen
+            return ent[1], False
+
+    # -- retuner exploration seam ---------------------------------------------
+    def override_decision(self, op: str, dims: tuple[int, ...],
+                          dtype_bytes: int, backend: str,
+                          knob: Knob) -> bool:
+        """Force the decision cache to serve ``knob`` for one shape key (the
+        retuner's bounded-epsilon exploration).  Refuses actively
+        quarantined knobs — exploration must never re-serve a crashing
+        config; returns False when refused."""
+        if type(dims) is not tuple:
+            dims = tuple(dims)
+        sub_key = (backend, op, int(dtype_bytes))
+        with self._lock:
+            ent = self._quarantined.get(sub_key + (knob,))
+            if ent is not None:
+                if time.monotonic() < ent[0]:
+                    return False
+                del self._quarantined[sub_key + (knob,)]
+            self._store_locked(sub_key + (dims,), knob)
+        return True
+
+    def invalidate_decision(self, op: str, dims: tuple[int, ...],
+                            dtype_bytes: int, backend: str) -> bool:
+        """Drop one cached decision so the next selection re-runs the model
+        (exploration restore / targeted invalidation).  Returns whether an
+        entry existed."""
+        if type(dims) is not tuple:
+            dims = tuple(dims)
+        key = (backend, op, int(dtype_bytes), dims)
+        with self._lock:
+            self._fold_touches_locked()
+            if key not in self._cache:
+                return False
+            del self._cache[key]
+            self._cache_mirror.pop(key, None)
+        return True
 
     def _version_of(self, sub_key: tuple) -> int:
         """Artifact generation of the registered subroutine (0 when the
@@ -551,14 +710,18 @@ class AdsalaRuntime:
         # serialise; eval statistics live on the (backend, op) shard
         sub = self._subs_get(sub_key)
         fast = self._fast_get(sub_key)
+        if self._faults is not None:
+            self._faults.fire("predictor_eval", backend=key[0], op=key[1],
+                              dtype_bytes=key[2], dims=key[3])
         t0 = time.perf_counter()
         knob = fast.select(key[3]) if fast is not None else sub.select(key[3])
         shard.count_eval(time.perf_counter() - t0)
+        knob, store_ok = self._apply_quarantine(sub_key, knob)
         with self._lock:
             # a hot swap invalidated this subroutine's cache entries while
             # we were evaluating: our knob may be the OLD model's decision —
             # return it (this call was in flight) but never store it
-            if self._swap_epochs.get(sub_key, 0) == epoch:
+            if store_ok and self._swap_epochs.get(sub_key, 0) == epoch:
                 self._store_locked(key, knob)
         return knob
 
@@ -583,6 +746,11 @@ class AdsalaRuntime:
         (a node that lost its model files keeps serving — fault tolerance).
         Default-path calls are recorded so `RuntimeStats` sees all traffic.
 
+        A miss-path model evaluation that *raises* degrades the same way —
+        the caller gets the default config instead of a failed BLAS call,
+        and the failure is counted in ``stats.eval_failures`` (a broken
+        predictor must cost performance, never availability).
+
         The registered-subroutine check is a lock-free read, so the common
         cases cost one lock acquisition (default, miss) or zero (hit)
         instead of the old check-release-reacquire round trip."""
@@ -595,7 +763,18 @@ class AdsalaRuntime:
                 b.calls += 1
                 b.default_calls += 1
             return default
-        return self.select(op, dims, dtype_bytes, backend=backend)
+        try:
+            return self.select(op, dims, dtype_bytes, backend=backend)
+        except Exception:
+            with self._lock:
+                base = self._base
+                base.calls += 1
+                base.default_calls += 1
+                base.eval_failures += 1
+                b = base.for_backend(backend)
+                b.calls += 1
+                b.default_calls += 1
+            return default
 
     # -- batched decisions ----------------------------------------------------
     def select_many(self, requests, *,
@@ -677,30 +856,50 @@ class AdsalaRuntime:
                     self._record_hit(key[0], key)
                 continue
             by_sub.setdefault(key[:3], []).append(key)
+        no_store: set[tuple] = set()          # quarantine-forced decisions
         try:
             for sub_key, keys in by_sub.items():
                 sub = self._subs_get(sub_key)
                 fast = self._fast_get(sub_key)
-                t0 = time.perf_counter()
-                if fast is not None:
-                    knobs = fast.select_many([k[3] for k in keys])
-                else:
-                    knobs = [sub.select(k[3]) for k in keys]
+                try:
+                    if self._faults is not None:
+                        self._faults.fire(
+                            "predictor_eval", backend=sub_key[0],
+                            op=sub_key[1], dtype_bytes=sub_key[2],
+                            n=len(keys))
+                    t0 = time.perf_counter()
+                    if fast is not None:
+                        knobs = fast.select_many([k[3] for k in keys])
+                    else:
+                        knobs = [sub.select(k[3]) for k in keys]
+                except Exception:
+                    # a failed fused evaluation degrades only its own group:
+                    # the keys stay unresolved (callers treat None like the
+                    # untuned default) instead of poisoning the whole batch
+                    with self._lock:
+                        self._base.eval_failures += len(keys)
+                    continue
                 # eval statistics live on the (backend, op) shard, like
                 # the one-at-a-time miss path
                 self._shard(sub_key[:2]).count_eval(
                     time.perf_counter() - t0, n=len(keys))
                 for key, knob in zip(keys, knobs):
+                    knob, store_ok = self._apply_quarantine(sub_key, knob)
                     resolved[key] = knob
+                    if not store_ok:
+                        no_store.add(key)
             if owned:
                 with self._lock:
                     for key in owned:
                         knob = resolved.get(key)
                         # skip keys whose subroutine was hot-swapped while
                         # we evaluated: the knob is the old model's decision
-                        # (returned to this in-flight caller, never stored)
-                        if knob is not None and self._swap_epochs.get(
-                                key[:3], 0) == epochs[key[:3]]:
+                        # (returned to this in-flight caller, never stored) —
+                        # and quarantine-forced fallbacks, which must never
+                        # shadow the model's real choice in the cache
+                        if knob is not None and key not in no_store \
+                                and self._swap_epochs.get(
+                                    key[:3], 0) == epochs[key[:3]]:
                             self._store_locked(key, knob)
         finally:
             # release owned entries BEFORE waiting on anyone else's (no
@@ -727,8 +926,12 @@ class AdsalaRuntime:
                 if record_hits:
                     self._record_hit(key[0], key)
             else:                 # timed out / leader failed / stale epoch
-                resolved[key] = self.select(key[1], key[3], key[2],
-                                            backend=key[0])
+                try:
+                    resolved[key] = self.select(key[1], key[3], key[2],
+                                                backend=key[0])
+                except Exception:
+                    with self._lock:       # leave None: caller runs default
+                        self._base.eval_failures += 1
         for key, slots in misses.items():
             knob = resolved.get(key)
             if knob is None:
@@ -771,13 +974,27 @@ class AdsalaRuntime:
         Each record carries the ``artifact_version`` of the subroutine that
         is registered for its key *now* — which is also the one that made
         the decision, because :meth:`swap` invalidates a subroutine's
-        entries in the same critical section that replaces it."""
+        entries in the same critical section that replaces it.
+
+        Active knob quarantines are exported too (``{"quarantine": 1, ...}``
+        records, prepended, TTL rebased to *remaining* seconds): a crashing
+        knob must stay benched across a warm restart, not get a fresh shot
+        because the process recycled."""
         with self._lock:
             self._fold_touches_locked()
-            return [{"backend": k[0], "op": k[1], "dtype_bytes": int(k[2]),
-                     "dims": [int(d) for d in k[3]], "knob": knob.dict,
-                     "artifact_version": self._version_of(k[:3])}
-                    for k, knob in self._cache.items()]
+            now = time.monotonic()
+            out: list[dict] = [
+                {"quarantine": 1, "backend": qk[0], "op": qk[1],
+                 "dtype_bytes": int(qk[2]), "knob": qk[3].dict,
+                 "fallback_knob": fb.dict, "ttl_s": deadline - now}
+                for qk, (deadline, fb) in self._quarantined.items()
+                if deadline > now]
+            out.extend(
+                {"backend": k[0], "op": k[1], "dtype_bytes": int(k[2]),
+                 "dims": [int(d) for d in k[3]], "knob": knob.dict,
+                 "artifact_version": self._version_of(k[:3])}
+                for k, knob in self._cache.items())
+            return out
 
     def import_cache(self, entries: list[dict]) -> int:
         """Warm-start the decision cache from :meth:`export_cache` records;
@@ -802,14 +1019,31 @@ class AdsalaRuntime:
           recalibration changed the candidate space and the cached knob no
           longer exists in it (stale artifacts must not dictate impossible
           configs).
+        * **knob under quarantine** (``stats.import_drops_quarantine``):
+          quarantine records are reinstated *first* (their remaining TTL
+          resumes from now), and any decision entry whose knob is actively
+          quarantined is then dropped — a warm start must not resurrect the
+          selection that was crashing when the cache was persisted.
 
         Entries for unregistered subroutines import as-is — there is no
         model or space to validate against yet.
         """
+        if self._faults is not None:
+            self._faults.fire("cache_import", entries=len(entries))
         n = 0
         with self._lock:
             self._fold_touches_locked()
+            now = time.monotonic()
             for e in entries:
+                if e.get("quarantine"):
+                    qkey = (str(e["backend"]), str(e["op"]),
+                            int(e["dtype_bytes"]),
+                            Knob(tuple(sorted(e["knob"].items()))))
+                    fb = Knob(tuple(sorted(e["fallback_knob"].items())))
+                    self._quarantined[qkey] = (now + float(e["ttl_s"]), fb)
+            for e in entries:
+                if e.get("quarantine"):
+                    continue
                 key = (str(e["backend"]), str(e["op"]), int(e["dtype_bytes"]),
                        tuple(int(d) for d in e["dims"]))
                 knob = Knob(tuple(sorted(e["knob"].items())))
@@ -822,6 +1056,10 @@ class AdsalaRuntime:
                 space = getattr(sub, "knob_space", None)
                 if space is not None and knob not in space.candidates:
                     self._base.import_drops_knob += 1
+                    continue
+                q = self._quarantined.get(key[:3] + (knob,))
+                if q is not None and q[0] > now:
+                    self._base.import_drops_quarantine += 1
                     continue
                 self._cache[key] = knob
                 self._cache.move_to_end(key)

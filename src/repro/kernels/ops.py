@@ -380,9 +380,16 @@ def run_op(op: str, operands: tuple, *, backend: str = "pallas",
     be = _backend_resolver()(backend)
     if stacked is None:
         stacked = getattr(operands[0], "ndim", 2) == 3
+    # chaos seam: a fault plan on the runtime can crash the dispatch exactly
+    # where a real kernel launch would fail (guarded so the default path
+    # costs two attribute checks and nothing else)
+    faults = getattr(runtime, "_faults", None) if runtime is not None else None
     if be.selects_own_knob:
         # the backend's executors resolve the knob themselves (pallas: at
         # jit trace time) — forward the runtime instead of pre-selecting
+        if faults is not None:
+            faults.fire("kernel_execute", backend=be.name, op=op,
+                        stacked=bool(stacked), knob=knob)
         if stacked:
             return be.execute_stacked(op, operands, knob, runtime=runtime,
                                       **kw)
@@ -392,6 +399,9 @@ def run_op(op: str, operands: tuple, *, backend: str = "pallas",
         dims = dims_of(op, tuple(x.shape for x in operands))
         knob = rt.select_or_default(op, dims, DTYPE_BYTES(operands[0].dtype),
                                     be.default_knob(op), backend=be.name)
+    if faults is not None:
+        faults.fire("kernel_execute", backend=be.name, op=op,
+                    stacked=bool(stacked), knob=knob)
     if stacked:
         return be.execute_stacked(op, operands, knob, **kw)
     return be.execute(op, operands, knob, **kw)

@@ -5,14 +5,25 @@
     ServeStats  — service-level counters (per-bucket detail on the runtime)
     Retuner     — drift-aware online retraining loop (opt-in; pass one to
                   BlasService to close the serving→install feedback loop)
+    FaultPlan   — deterministic seeded fault injection (chaos harness); give
+                  one plan to the service/runtime/retuner to drive every
+                  failure path on purpose
 
-See ``repro/serving/service.py`` for the life-of-a-request diagram,
-``repro/serving/retune.py`` for the drift/refit/hot-swap semantics, and
-``benchmarks/serve_bench.py`` for the batched-vs-unbatched load harness.
+Failure semantics: every submitted request resolves — result, or a typed
+error (ServiceClosedError / DeadlineExpiredError / ExecutionFailedError).
+See ``repro/serving/service.py`` for the life-of-a-request diagram and the
+degradation ladder, ``repro/serving/retune.py`` for the drift/refit/hot-swap
+semantics, ``repro/serving/faults.py`` for the named injection sites, and
+``benchmarks/chaos_bench.py`` for the seeded fault scenarios.
 """
 
+from .faults import FaultPlan, FaultSpec, InjectedFault
 from .retune import Retuner, RetuneConfig, RetuneStats
-from .service import BlasService, ServeConfig, ServeStats, bucket_key
+from .service import (BlasService, DeadlineExpiredError, ExecutionFailedError,
+                      ServeConfig, ServeStats, ServiceClosedError, bucket_key)
 
 __all__ = ["BlasService", "ServeConfig", "ServeStats", "bucket_key",
-           "Retuner", "RetuneConfig", "RetuneStats"]
+           "Retuner", "RetuneConfig", "RetuneStats",
+           "FaultPlan", "FaultSpec", "InjectedFault",
+           "ServiceClosedError", "DeadlineExpiredError",
+           "ExecutionFailedError"]

@@ -68,6 +68,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import random
 import threading
 import time
 from typing import Optional
@@ -97,6 +98,14 @@ class RetuneConfig:
     tune_trials: int = 2           # hyper-parameter trials per refit
     use_lof: bool = False          # see module docstring: LOF eats drift
     seed: int = 0                  # deterministic refits
+    #: per-step probability of overriding ONE served bucket's cached
+    #: decision with a random non-argmin, non-quarantined knob for a single
+    #: step — serving telemetry is exploitation-only, so without occasional
+    #: exploration a refit blend never gets a *measured* row for the
+    #: columns the argmin policy skips, and ``correct_install`` has nothing
+    #: to anchor them on.  0 (the default) disables exploration — the
+    #: reproducibility posture, like the retuner itself.
+    explore_epsilon: float = 0.0
 
     def __post_init__(self) -> None:
         if not 0.0 < self.ewma_alpha <= 1.0:
@@ -107,6 +116,8 @@ class RetuneConfig:
             raise ValueError("min_samples must be >= 1")
         if self.telemetry_cap < 1 or self.telemetry_repeat < 1:
             raise ValueError("telemetry_cap/telemetry_repeat must be >= 1")
+        if not 0.0 <= self.explore_epsilon < 1.0:
+            raise ValueError("explore_epsilon must be in [0, 1)")
 
 
 @dataclasses.dataclass
@@ -118,6 +129,9 @@ class RetuneStats:
     swap_invalidations: int = 0  # decision-cache entries invalidated
     errors: int = 0
     last_error: Optional[str] = None
+    observe_failures: int = 0   # telemetry-ingestion raises (survived)
+    refit_failures: int = 0     # retune raises (survived; backoff applied)
+    explorations: int = 0       # epsilon decision-cache overrides served
 
 
 class _SubState:
@@ -160,16 +174,22 @@ class Retuner:
     """
 
     def __init__(self, runtime: AdsalaRuntime, *, registry=None,
-                 config: Optional[RetuneConfig] = None) -> None:
+                 config: Optional[RetuneConfig] = None,
+                 faults=None) -> None:
         self.runtime = runtime
         self.registry = registry
         self.config = config if config is not None else RetuneConfig()
         self.stats = RetuneStats()
+        #: optional repro.serving.faults.FaultPlan (chaos harness)
+        self._faults = faults
         #: retune audit log: one dict per applied swap
         self.events: list[dict] = []
         self._state: dict[tuple, _SubState] = {}
         #: bucket key -> (exec_seconds, exec_items) already consumed
         self._seen: dict[tuple, tuple[float, int]] = {}
+        #: active exploration overrides: bucket key -> served non-argmin knob
+        self._exploring: dict[tuple, object] = {}
+        self._explore_rng = random.Random(self.config.seed)
         self._lock = threading.Lock()       # observe/step vs stop
         self._thread: Optional[threading.Thread] = None
         self._halt = threading.Event()
@@ -183,6 +203,8 @@ class Retuner:
         the decision cache currently holds for the bucket (``peek`` — a
         just-invalidated key contributes nothing until it is re-decided),
         and a finite positive prediction from the registered predictor."""
+        if self._faults is not None:
+            self._faults.fire("retuner_observe")
         added = 0
         snapshot = self.runtime.stats.buckets
         with self._lock:
@@ -260,10 +282,19 @@ class Retuner:
     # -- the retune cycle -----------------------------------------------------
     def step(self) -> list[tuple]:
         """One feedback-loop iteration: ingest telemetry, retune every
-        drifted subroutine; returns the list of swapped subroutine keys.
-        Deterministic given the runtime's bucket state — the bench and the
-        tests drive this directly."""
-        self.observe()
+        drifted subroutine, run the epsilon-exploration pass; returns the
+        list of swapped subroutine keys.  Deterministic given the runtime's
+        bucket state — the bench and the tests drive this directly.
+
+        Every phase is individually fault-isolated: an observe raise leaves
+        the drift state stale but the step alive (``observe_failures``), a
+        refit raise is counted (``errors``/``refit_failures``) and the loop
+        keeps serving the old model."""
+        try:
+            self.observe()
+        except Exception as e:          # noqa: BLE001 — stale but alive
+            self.stats.observe_failures += 1
+            self.stats.last_error = f"{type(e).__name__}: {e}"
         swapped = []
         for sub_key in self.drifted():
             self.stats.drift_events += 1
@@ -272,14 +303,68 @@ class Retuner:
                 swapped.append(sub_key)
             except Exception as e:      # noqa: BLE001 — keep serving
                 self.stats.errors += 1
+                self.stats.refit_failures += 1
                 self.stats.last_error = f"{type(e).__name__}: {e}"
+        try:
+            self._explore()
+        except Exception as e:          # noqa: BLE001 — strictly optional
+            self.stats.last_error = f"{type(e).__name__}: {e}"
         return swapped
+
+    # -- bounded-epsilon exploration ------------------------------------------
+    def _explore(self) -> int:
+        """With probability ``explore_epsilon``, override ONE served
+        bucket's cached decision with a random non-argmin knob for the
+        coming step (restored — invalidated back to the model's choice — at
+        the next call, after :meth:`observe` has ingested its measurement).
+
+        Serving telemetry is exploitation-only: without this, a refit blend
+        never sees a measured row for a column the argmin policy skips, and
+        ``correct_install`` extrapolates those columns from nothing.
+        Quarantined knobs are excluded — exploration must never re-serve a
+        config that is currently benched for crashing."""
+        eps = self.config.explore_epsilon
+        if not eps:
+            return 0
+        rt = self.runtime
+        # restore first: the observe() that preceded this call has already
+        # ingested the explored knob's measurement
+        for (backend, op, dtype_bytes, dims) in list(self._exploring):
+            rt.invalidate_decision(op, dims, dtype_bytes, backend)
+        self._exploring.clear()
+        if self._explore_rng.random() >= eps:
+            return 0
+        served = sorted(k for k in rt.stats.buckets
+                        if rt.has(k[1], k[2], k[0])
+                        and rt.peek(k[1], k[3], k[2], k[0]) is not None)
+        if not served:
+            return 0
+        key = served[self._explore_rng.randrange(len(served))]
+        backend, op, dtype_bytes, dims = key
+        space = getattr(rt.subroutine(op, dtype_bytes, backend),
+                        "knob_space", None)
+        if space is None:
+            return 0
+        current = rt.peek(op, dims, dtype_bytes, backend)
+        cands = [c for c in space.candidates
+                 if c != current
+                 and not rt.is_quarantined(op, dtype_bytes, backend, c)]
+        if not cands:
+            return 0
+        knob = cands[self._explore_rng.randrange(len(cands))]
+        if rt.override_decision(op, dims, dtype_bytes, backend, knob):
+            self._exploring[key] = knob
+            self.stats.explorations += 1
+            return 1
+        return 0
 
     def retune(self, sub_key: tuple) -> "object":
         """Refit one subroutine on the blended install+telemetry dataset and
         hot-swap it into the runtime; returns the new subroutine."""
         backend, op, dtype_bytes = sub_key
         rt = self.runtime
+        if self._faults is not None:
+            self._faults.fire("retuner_refit", sub_key=sub_key)
         sub = rt.subroutine(op, dtype_bytes, backend)
         with self._lock:
             st = self._state.get(sub_key)
@@ -405,13 +490,23 @@ class Retuner:
             self._thread = None
 
     def _loop(self) -> None:
-        while not self._halt.wait(self.config.interval_s):
+        # consecutive failing steps back the poll off exponentially (capped
+        # at 8× interval): a persistently crashing refit or observe must
+        # neither kill the daemon nor spin it at full rate against the
+        # same error
+        failures = 0
+        while not self._halt.wait(
+                self.config.interval_s * min(1 << failures, 8)):
+            before = (self.stats.errors + self.stats.observe_failures)
             t0 = time.perf_counter()
             try:
                 self.step()
             except Exception as e:      # noqa: BLE001 — never kill serving
                 self.stats.errors += 1
                 self.stats.last_error = f"{type(e).__name__}: {e}"
+            failed = (self.stats.errors
+                      + self.stats.observe_failures) > before
+            failures = failures + 1 if failed else 0
             # a pathological refit storm must not starve the stop signal
             if time.perf_counter() - t0 > 10 * self.config.interval_s:
                 continue

@@ -28,6 +28,24 @@ The hot submit path stays cheap on purpose: one mutex acquisition, no
 broadcast.  Workers block on the ready *queue* (not a shared condition), the
 scheduler sleeps on an event it only needs when a bucket is *opened*, and
 completion broadcasts fire per batch, not per request.
+
+Failure semantics (the degradation ladder)::
+
+    stacked run_op crashes
+      ├─► bounded exponential-backoff retries on the same backend/knob
+      ├─► default-knob probe — success pins the crash on the *knob*:
+      │     quarantine (backend, op, dtype, knob) in the runtime (TTL'd
+      │     circuit breaker) and serve the probe's result
+      ├─► next backend down degradation_chain() (pallas → cpu_blocked → ref)
+      ├─► bisect the bucket: one poisoned request must not sink batchmates
+      └─► typed ExecutionFailedError on the survivors' futures
+
+Every submitted request therefore resolves — to a result, a
+``DeadlineExpiredError`` (its ``submit(deadline=)`` lapsed before
+execution), an ``ExecutionFailedError`` (ladder exhausted), or a
+``ServiceClosedError`` (``close()`` aborted it before execution).  Workers
+are supervised: a dead worker's claimed bucket is requeued and the thread
+respawned (``ServeStats.worker_respawns``).
 """
 
 from __future__ import annotations
@@ -43,7 +61,23 @@ import numpy as np
 
 from repro.core.runtime import AdsalaRuntime, global_runtime
 
-__all__ = ["BlasService", "ServeConfig", "ServeStats", "bucket_key"]
+__all__ = ["BlasService", "ServeConfig", "ServeStats", "bucket_key",
+           "ServiceClosedError", "DeadlineExpiredError",
+           "ExecutionFailedError"]
+
+
+class ServiceClosedError(RuntimeError):
+    """submit() on a closed service, or a request abandoned by close()."""
+
+
+class DeadlineExpiredError(TimeoutError):
+    """The request's ``submit(deadline=)`` lapsed before execution began."""
+
+
+class ExecutionFailedError(RuntimeError):
+    """Terminal execution failure: every rung of the degradation ladder
+    (retries → default-knob probe → backend fallback → bisection) failed.
+    The last underlying exception is chained as ``__cause__``."""
 
 #: ops the service accepts (import-light mirror of backends.L3_OPS)
 SERVABLE_OPS = ("gemm", "symm", "syrk", "syr2k", "trmm", "trsm")
@@ -59,6 +93,17 @@ def _backend_resolver():
         from repro.backends import resolve_backend
         _resolve_backend = resolve_backend
     return _resolve_backend
+
+
+_degradation_chain = None
+
+
+def _degrader():
+    global _degradation_chain
+    if _degradation_chain is None:
+        from repro.backends import degradation_chain
+        _degradation_chain = degradation_chain
+    return _degradation_chain
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +133,12 @@ class ServeConfig:
                                   # linger (sub-ms) to every COLD trace, a
                                   # poor trade when traffic is single-
                                   # threaded or shapes rarely repeat.
+    # -- resilience (the degradation ladder) --
+    exec_retries: int = 1         # same-backend/knob retries after a crash
+    retry_backoff_s: float = 0.005    # backoff base, doubled per retry
+    backend_fallback: bool = True     # walk degradation_chain() on failure
+    bisect_failures: bool = True      # split a failing multi-request bucket
+    quarantine_ttl_s: float = 30.0    # knob circuit-breaker open duration
 
     def __post_init__(self) -> None:
         if self.trace_batching not in (True, False, "auto"):
@@ -102,6 +153,12 @@ class ServeConfig:
             raise ValueError("linger_ms must be >= 0")
         if self.max_pending < 1:
             raise ValueError("max_pending must be >= 1")
+        if self.exec_retries < 0:
+            raise ValueError("exec_retries must be >= 0")
+        if self.retry_backoff_s < 0:
+            raise ValueError("retry_backoff_s must be >= 0")
+        if self.quarantine_ttl_s <= 0:
+            raise ValueError("quarantine_ttl_s must be > 0")
 
 
 @dataclasses.dataclass
@@ -124,6 +181,14 @@ class ServeStats:
     latency_sum: float = 0.0      # submit→result, seconds, completed only
     queue_sum: float = 0.0        # submit→execution-start (bucket wait)
     exec_sum: float = 0.0         # per-request share: its batch's exec span
+    # -- resilience counters --
+    retries: int = 0              # same-backend re-executions after a crash
+    fallback_executions: int = 0  # stacked runs completed on a degraded
+                                  # backend (below the requested one)
+    quarantined_knobs: int = 0    # knob circuit breakers this service opened
+    deadline_expired: int = 0     # requests dropped before execution
+    worker_respawns: int = 0      # dead workers detected and replaced
+    warm_start_errors: int = 0    # registry load/save failures (survived)
 
     @property
     def mean_batch(self) -> float:
@@ -161,6 +226,24 @@ def bucket_key(op: str, shapes: Sequence[tuple[int, ...]], dtypes,
             dims_of(op, tuple(shapes)), names, extra)
 
 
+def _resolve_result(fut: Future, value) -> bool:
+    """Set a future's result; False if it was already resolved (a bucket
+    re-executed after worker recovery must keep the first resolution)."""
+    try:
+        fut.set_result(value)
+        return True
+    except Exception:        # concurrent.futures.InvalidStateError
+        return False
+
+
+def _resolve_exc(fut: Future, exc: BaseException) -> bool:
+    try:
+        fut.set_exception(exc)
+        return True
+    except Exception:        # already resolved — keep the first outcome
+        return False
+
+
 @dataclasses.dataclass
 class _Request:
     op: str
@@ -168,15 +251,17 @@ class _Request:
     kw: dict
     future: Future
     t_submit: float
+    deadline: Optional[float] = None   # absolute monotonic; None = no limit
 
 
 class _Bucket:
-    __slots__ = ("key", "requests", "t_head")
+    __slots__ = ("key", "requests", "t_head", "recovered")
 
     def __init__(self, key: tuple, t_head: float) -> None:
         self.key = key
         self.requests: list[_Request] = []
         self.t_head = t_head          # monotonic enqueue time of the head
+        self.recovered = 0            # times requeued after a worker death
 
 
 class BlasService:
@@ -198,14 +283,23 @@ class BlasService:
 
     def __init__(self, *, runtime: Optional[AdsalaRuntime] = None,
                  config: Optional[ServeConfig] = None,
-                 registry=None, retuner=None) -> None:
+                 registry=None, retuner=None, faults=None) -> None:
         self.runtime = runtime if runtime is not None else global_runtime()
         self.config = config if config is not None else ServeConfig()
         self.registry = registry
         self.stats = ServeStats()
+        #: optional repro.serving.faults.FaultPlan (chaos harness); every
+        #: site is behind an `is not None` check — disabled costs nothing
+        self._faults = faults
         self.warm_started = 0
         if registry is not None:
-            self.warm_started = registry.load_decision_cache(self.runtime)
+            # a corrupt or missing persisted cache must not stop the server
+            # from starting cold — warm start is an optimization, not a
+            # dependency
+            try:
+                self.warm_started = registry.load_decision_cache(self.runtime)
+            except Exception:        # noqa: BLE001 — cold start instead
+                self.stats.warm_start_errors += 1
         # optional online feedback loop (repro.serving.retune.Retuner):
         # started once the workers are up, stopped before the decision
         # cache is persisted on close so the saved cache reflects the final
@@ -241,27 +335,41 @@ class BlasService:
         self._wake = threading.Event()    # scheduler: new bucket opened
         self._pending = 0                 # submitted, result not yet set
         self._closed = False
+        # per-worker claim slots: the bucket worker i is currently holding
+        # (set BEFORE any code that could die, cleared after execution) —
+        # the supervisor requeues a dead worker's claimed bucket from here
+        self._claims: list[Optional[_Bucket]] = \
+            [None] * self.config.workers
 
         self._scheduler = threading.Thread(
             target=self._scheduler_loop, name="blas-serve-scheduler",
             daemon=True)
         self._workers = [
-            threading.Thread(target=self._worker_loop,
+            threading.Thread(target=self._worker_main, args=(i,),
                              name=f"blas-serve-worker-{i}", daemon=True)
             for i in range(self.config.workers)]
-        self._scheduler.start()
+        # workers first: the scheduler doubles as the worker supervisor and
+        # must never observe a not-yet-started thread as "dead"
         for w in self._workers:
             w.start()
+        self._scheduler.start()
 
     # -- submission -----------------------------------------------------------
     def submit(self, op: str, operands: tuple, *,
-               backend: Optional[str] = None, **kw) -> Future:
+               backend: Optional[str] = None,
+               deadline: Optional[float] = None, **kw) -> Future:
         """Enqueue one BLAS call; returns a Future resolving to its result.
 
         Blocks (backpressure) while ``max_pending`` requests are in flight.
+        ``deadline`` (seconds from now) bounds the request's life: a request
+        still waiting in a bucket when its deadline lapses is dropped before
+        execution and its future fails with :class:`DeadlineExpiredError`.
+        Raises :class:`ServiceClosedError` after :meth:`close`.
         """
         if op not in SERVABLE_OPS:
             raise ValueError(f"unknown op {op!r}; servable: {SERVABLE_OPS}")
+        if deadline is not None and deadline <= 0:
+            raise ValueError("deadline must be > 0 seconds from now")
         operands = tuple(np.asarray(x) for x in operands)
         if any(x.ndim != 2 for x in operands):
             raise ValueError("submit takes one 2-D problem per request; "
@@ -272,14 +380,15 @@ class BlasService:
                          tuple(sorted(kw.items())))
         now = time.monotonic()
         req = _Request(op=op, operands=operands, kw=kw, future=Future(),
-                       t_submit=now)
+                       t_submit=now,
+                       deadline=None if deadline is None else now + deadline)
         with self._mutex:
             if self._closed:
-                raise RuntimeError("service is closed")
+                raise ServiceClosedError("service is closed")
             while self._pending >= self.config.max_pending:
                 self._done.wait(0.05)
                 if self._closed:
-                    raise RuntimeError("service is closed")
+                    raise ServiceClosedError("service is closed")
             self._pending += 1
             self.stats.submitted += 1
             bucket = self._buckets.get(key)
@@ -360,7 +469,10 @@ class BlasService:
 
         New submissions are rejected *before* the drain starts — otherwise a
         submit racing the shutdown could park a request in a bucket no
-        scheduler or worker would ever flush."""
+        scheduler or worker would ever flush.  Requests the drain could NOT
+        finish (hung backend, dead workers past the drain timeout) are
+        *failed* with :class:`ServiceClosedError`, never leaked — no caller
+        blocks forever on a future the service has abandoned."""
         with self._mutex:
             if self._closed:
                 return
@@ -370,16 +482,54 @@ class BlasService:
         self._wake.set()
         for _ in self._workers:
             self._ready.put(None)         # worker shutdown sentinels
-        self._scheduler.join(timeout=5.0)
+        # the join budget scales with the caller's close timeout: a caller
+        # asking for a fast close must not wait 5 s per stuck worker — the
+        # worker's bucket is reclaimed from its claim slot below instead
+        join_s = min(5.0, max(0.1, timeout))
+        self._scheduler.join(timeout=join_s)
         for w in self._workers:
-            w.join(timeout=5.0)
+            w.join(timeout=join_s)
+        self._abort_leftovers()
         if self._trace_cm is not None:      # restore the previous batcher
             self._trace_cm.__exit__(None, None, None)
             self._trace_cm = None
         if self.retuner is not None:        # before the cache is persisted:
             self.retuner.stop()             # no swap may race the export
         if self.registry is not None:
-            self.registry.save_decision_cache(self.runtime)
+            try:
+                self.registry.save_decision_cache(self.runtime)
+            except Exception:    # noqa: BLE001 — persistence is best-effort
+                with self._mutex:
+                    self.stats.warm_start_errors += 1
+
+    def _abort_leftovers(self) -> None:
+        """Fail (never leak) every request the drain could not finish: still
+        bucketed, parked on the ready queue, or claimed by a worker that
+        died without completing it."""
+        leftovers: list[_Bucket] = []
+        with self._mutex:
+            for key in list(self._buckets):
+                leftovers.append(self._buckets.pop(key))
+        while True:
+            try:
+                b = self._ready.get_nowait()
+            except queue.Empty:
+                break
+            if b is not None:             # drop stale worker sentinels
+                leftovers.append(b)
+        for i, b in enumerate(self._claims):
+            if b is not None:
+                self._claims[i] = None
+                leftovers.append(b)
+        exc = ServiceClosedError(
+            "service is closed; request abandoned before execution")
+        n = sum(_resolve_exc(r.future, exc)
+                for b in leftovers for r in b.requests)
+        if n:
+            with self._mutex:
+                self.stats.failed += n
+                self._pending -= n
+                self._done.notify_all()
 
     def __enter__(self) -> "BlasService":
         return self
@@ -389,7 +539,9 @@ class BlasService:
 
     # -- scheduler / workers --------------------------------------------------
     def _scheduler_loop(self) -> None:
-        """Linger watchdog: flush buckets whose head request has aged out."""
+        """Linger watchdog + worker supervisor: flush buckets whose head
+        request has aged out, and detect/replace dead workers (requeueing
+        whatever bucket the casualty had claimed)."""
         linger = max(self.config.linger_ms / 1000.0, 1e-4)
         while not self._closed:
             self._wake.clear()
@@ -410,11 +562,58 @@ class BlasService:
                 self._prewarm(aged)
                 for bucket in aged:
                     self._ready.put(bucket)
-            # empty table: sleep until a bucket opens; else until the
-            # earliest linger deadline
-            self._wake.wait(None if idle else timeout)
+            self._supervise_workers()
+            # the wait is bounded even when the bucket table is idle —
+            # supervision must keep running while requests sit on the ready
+            # queue or inside a (possibly dying) worker
+            self._wake.wait(min(timeout, 0.05) if not idle else 0.05)
 
-    def _worker_loop(self) -> None:
+    def _supervise_workers(self) -> None:
+        """Replace dead workers.  The casualty's claimed bucket (its claim
+        slot is set before any fallible work) is requeued so its requests
+        survive the death; a bucket that keeps killing workers is failed
+        after 3 recoveries instead of crash-looping the pool."""
+        if self._closed:
+            return
+        for i, t in enumerate(self._workers):
+            if t.is_alive():
+                continue
+            bucket = self._claims[i]
+            self._claims[i] = None
+            w = threading.Thread(target=self._worker_main, args=(i,),
+                                 name=f"blas-serve-worker-{i}", daemon=True)
+            self._workers[i] = w
+            w.start()
+            with self._mutex:
+                self.stats.worker_respawns += 1
+            if bucket is None:
+                continue
+            # requests the dead worker already resolved stay resolved
+            bucket.requests = [r for r in bucket.requests
+                               if not r.future.done()]
+            bucket.recovered += 1
+            if not bucket.requests:
+                continue
+            if bucket.recovered > 3:
+                exc = ExecutionFailedError(
+                    f"bucket {bucket.key[:4]} killed "
+                    f"{bucket.recovered} workers; not requeueing again")
+                n = sum(_resolve_exc(r.future, exc)
+                        for r in bucket.requests)
+                with self._mutex:
+                    self.stats.failed += n
+                    self._pending -= n
+                    self._done.notify_all()
+            else:
+                self._ready.put(bucket)
+
+    def _worker_main(self, idx: int) -> None:
+        try:
+            self._worker_loop(idx)
+        except BaseException:    # noqa: BLE001 — a dying worker must exit
+            return               # quietly; the supervisor sees the death
+
+    def _worker_loop(self, idx: int) -> None:
         """Workers drain the ready queue; an *idle* worker steals the
         largest worthwhile pending bucket instead of waiting out its linger
         — work-conserving scheduling, so linger only delays requests while
@@ -425,6 +624,7 @@ class BlasService:
         min_steal = self.config.min_steal
         if min_steal is None:
             min_steal = max(1, self.config.max_batch // 2)
+        claims = self._claims
         poll = 0.001
         while True:
             try:
@@ -439,7 +639,13 @@ class BlasService:
                     continue
             if bucket is None:            # shutdown sentinel
                 return
+            # claim BEFORE any fallible work: if this thread dies from here
+            # on, the supervisor finds the bucket in the claim slot
+            claims[idx] = bucket
+            if self._faults is not None:
+                self._faults.fire("worker", worker=idx, key=bucket.key)
             self._execute(bucket)
+            claims[idx] = None
             poll = 0.001
 
     def _steal(self, min_steal: int) -> tuple[Optional[_Bucket], bool]:
@@ -472,54 +678,163 @@ class BlasService:
         return min(width, self.config.max_batch)
 
     def _execute(self, bucket: _Bucket) -> None:
+        """Execute one bucket: drop deadline-expired requests, then run the
+        survivors through the degradation ladder (every future resolves)."""
+        now = time.monotonic()
+        live, expired = [], []
+        for r in bucket.requests:
+            (live if r.deadline is None or now < r.deadline
+             else expired).append(r)
+        if expired:
+            exc = DeadlineExpiredError(
+                "request deadline expired before execution")
+            n = sum(_resolve_exc(r.future, exc) for r in expired)
+            with self._mutex:
+                self.stats.deadline_expired += n
+                self._pending -= n
+                self._done.notify_all()
+        if live:
+            self._execute_chain(bucket, live)
+
+    def _execute_chain(self, bucket: _Bucket, reqs: list) -> None:
+        """The degradation ladder for one stack of requests: per backend
+        rung — bounded-backoff retries with the selected knob, then a
+        default-knob probe whose success quarantines the selected knob —
+        then the next rung of ``degradation_chain()``; an exhausted chain
+        bisects multi-request buckets (one poisoned request must not sink
+        its batchmates) and finally fails futures with a typed error."""
+        backend, op, dtype_bytes, dims = bucket.key[:4]
+        cfg = self.config
+        chain = self._degrade_chain(backend) if cfg.backend_fallback \
+            else (backend,)
+        resolver = _backend_resolver()
+        last_exc: Exception | None = None
+        for be_name in chain:
+            try:
+                be = resolver(be_name)
+            except Exception as e:       # noqa: BLE001 — rung unregistered
+                last_exc = e
+                continue
+            if be.name != be_name:
+                continue    # resolve-time fallback already left this rung;
+                            # the chain's own later rungs cover the target
+            try:
+                default = be.default_knob(op)
+            except Exception as e:       # noqa: BLE001
+                last_exc = e
+                continue
+            # ONE knob decision for the whole stack, under the executed
+            # backend's cache key (exactly what run_op would have selected)
+            knob = self.runtime.select_or_default(
+                op, dims, dtype_bytes, default, backend=be_name)
+            degraded = be_name != backend
+            for attempt in range(cfg.exec_retries + 1):
+                if attempt:
+                    with self._mutex:
+                        self.stats.retries += 1
+                    time.sleep(cfg.retry_backoff_s * (1 << (attempt - 1)))
+                try:
+                    self._run_and_resolve(bucket, reqs, be_name, knob,
+                                          attempt, degraded)
+                    return
+                except Exception as e:   # noqa: BLE001 — next attempt/rung
+                    last_exc = e
+            if knob != default:
+                # knob-specific-failure probe: the model's pick crashed
+                # every attempt — if the backend's own default config runs
+                # clean, the crash is pinned on the KNOB, so quarantine it
+                # (TTL'd breaker; the cached decision is invalidated in the
+                # same stroke) and serve the probe's result
+                try:
+                    self._run_and_resolve(bucket, reqs, be_name, default,
+                                          cfg.exec_retries + 1, degraded)
+                except Exception as e:   # noqa: BLE001 — backend-wide after
+                    last_exc = e         # all: fall through to the next rung
+                else:
+                    self.runtime.quarantine_knob(
+                        op, dtype_bytes, be_name, knob, fallback=default,
+                        ttl_s=cfg.quarantine_ttl_s)
+                    with self._mutex:
+                        self.stats.quarantined_knobs += 1
+                    return
+        if cfg.bisect_failures and len(reqs) > 1:
+            # the whole chain failed for the stack — a single poisoned
+            # request (bad operand values, shape edge case) may be taking
+            # its batchmates down with it: split and retry each half
+            mid = (len(reqs) + 1) // 2
+            self._execute_chain(bucket, reqs[:mid])
+            self._execute_chain(bucket, reqs[mid:])
+            return
+        exc = ExecutionFailedError(
+            f"{op} bucket dims={dims} failed on every backend in {chain}")
+        exc.__cause__ = last_exc
+        n = sum(_resolve_exc(r.future, exc) for r in reqs)
+        # futures resolve BEFORE the pending count drops: drain()/close()
+        # promise that no request is in flight once they return
+        with self._mutex:
+            self.stats.failed += n
+            self.stats.batches += 1
+            self._pending -= n
+            self._done.notify_all()
+
+    @staticmethod
+    def _degrade_chain(backend: str) -> tuple[str, ...]:
+        try:
+            return _degrader()(backend)
+        except Exception:        # noqa: BLE001 — backends package broken
+            return (backend,)
+
+    def _run_and_resolve(self, bucket: _Bucket, reqs: list, be_name: str,
+                         knob, attempt: int, degraded: bool) -> None:
+        """One stacked execution on one backend with one explicit knob;
+        resolves futures and books stats on success, raises on failure
+        (leaving every future untouched for the next rung)."""
         from repro.kernels.ops import run_op
-        reqs = bucket.requests
-        backend, op, dtype_bytes, dims, _dtype, _extra = bucket.key
-        width = self._pad_width(len(reqs), backend)
+        _backend, op, dtype_bytes, dims = bucket.key[:4]
+        width = self._pad_width(len(reqs), be_name)
         # the stack build is accounted as queue time, not execution: only
         # the run_op span is "executing" — the retuner compares it against
         # the model's per-call predictions, and folding scheduler-side work
         # (queue wait, linger, stacking) into it would read as drift
-        try:
-            stacked = tuple(
-                np.stack([r.operands[i] for r in reqs] +
-                         [reqs[-1].operands[i]] * (width - len(reqs)))
-                for i in range(len(reqs[0].operands)))
-            t_exec = time.monotonic()
-            out = np.asarray(run_op(op, stacked, backend=backend,
-                                    runtime=self.runtime, stacked=True,
-                                    **reqs[0].kw))
-        except Exception as e:           # noqa: BLE001 — fail the whole bucket
-            for r in reqs:
-                r.future.set_exception(e)
-            # futures resolve BEFORE the pending count drops: drain()/close()
-            # promise that no request is in flight once they return
-            with self._mutex:
-                self.stats.failed += len(reqs)
-                self.stats.batches += 1
-                self._pending -= len(reqs)
-                self._done.notify_all()
-            return
+        stacked = tuple(
+            np.stack([r.operands[i] for r in reqs] +
+                     [reqs[-1].operands[i]] * (width - len(reqs)))
+            for i in range(len(reqs[0].operands)))
+        if self._faults is not None:
+            self._faults.fire("stacked_execute", backend=be_name, op=op,
+                              dims=dims, attempt=attempt, n=len(reqs))
+        t_exec = time.monotonic()
+        out = np.asarray(run_op(op, stacked, backend=be_name, knob=knob,
+                                runtime=self.runtime, stacked=True,
+                                **reqs[0].kw))
         t_done = time.monotonic()
         exec_span = t_done - t_exec
         queue_span = sum(t_exec - r.t_submit for r in reqs)
-        self.runtime.record_batch(op, dims, dtype_bytes, backend, len(reqs),
+        # telemetry is credited to the backend that EXECUTED (the retuner
+        # compares execution time against that backend's predictions)
+        self.runtime.record_batch(op, dims, dtype_bytes, be_name, len(reqs),
                                   exec_seconds=exec_span, exec_items=width,
                                   queue_seconds=queue_span)
         now = time.monotonic()
+        resolved = 0
+        latency = 0.0
         for i, r in enumerate(reqs):
             # copy: a view of out would pin the whole (possibly padded)
             # stack in memory for as long as any one result is referenced
-            r.future.set_result(out[i].copy())
+            if _resolve_result(r.future, out[i].copy()):
+                resolved += 1
+                latency += now - r.t_submit
         # futures resolve BEFORE the pending count drops: drain()/close()
         # promise that no request is in flight once they return
         with self._mutex:
-            self.stats.completed += len(reqs)
+            self.stats.completed += resolved
             self.stats.batches += 1
             self.stats.max_batch = max(self.stats.max_batch, len(reqs))
             self.stats.padded_items += width - len(reqs)
-            self.stats.latency_sum += sum(now - r.t_submit for r in reqs)
+            self.stats.latency_sum += latency
             self.stats.queue_sum += queue_span
-            self.stats.exec_sum += exec_span * len(reqs)
-            self._pending -= len(reqs)
+            self.stats.exec_sum += exec_span * resolved
+            if degraded:
+                self.stats.fallback_executions += 1
+            self._pending -= resolved
             self._done.notify_all()

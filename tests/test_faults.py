@@ -1,0 +1,162 @@
+"""Tests for the deterministic fault-injection plan (repro.serving.faults):
+spec validation, occurrence windows (after/times/p), matching, determinism
+under a seed, latency-only specs, reset, and thread-safety of the counters."""
+
+import threading
+import time
+
+import pytest
+
+from repro.serving import FaultPlan, FaultSpec, InjectedFault
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec(site="s", times=-1)
+    with pytest.raises(ValueError):
+        FaultSpec(site="s", after=-1)
+    with pytest.raises(ValueError):
+        FaultSpec(site="s", p=1.5)
+    with pytest.raises(ValueError):
+        FaultSpec(site="s", p=-0.1)
+    with pytest.raises(ValueError):
+        # neither an exception nor latency: the spec would be a no-op
+        FaultSpec(site="s", exc=None, latency_s=0.0)
+
+
+def test_default_spec_fires_exactly_once():
+    plan = FaultPlan([FaultSpec(site="s")])
+    with pytest.raises(InjectedFault):
+        plan.fire("s")
+    plan.fire("s")                    # exhausted: silent
+    assert plan.fired("s") == 1
+    assert plan.specs("s")[0].seen == 2
+
+
+def test_site_isolation():
+    plan = FaultPlan([FaultSpec(site="a")])
+    plan.fire("b")                    # wrong site: never matches
+    assert plan.fired() == 0
+    with pytest.raises(InjectedFault):
+        plan.fire("a")
+
+
+def test_after_skips_then_times_bounds():
+    plan = FaultPlan([FaultSpec(site="s", after=2, times=2)])
+    plan.fire("s")                    # skipped (1/2)
+    plan.fire("s")                    # skipped (2/2)
+    with pytest.raises(InjectedFault):
+        plan.fire("s")                # firing 1
+    with pytest.raises(InjectedFault):
+        plan.fire("s")                # firing 2
+    plan.fire("s")                    # exhausted
+    assert plan.fired("s") == 2
+
+
+def test_times_none_fires_forever():
+    plan = FaultPlan([FaultSpec(site="s", times=None)])
+    for _ in range(5):
+        with pytest.raises(InjectedFault):
+            plan.fire("s")
+    assert plan.fired("s") == 5
+
+
+def test_match_predicate_filters_context():
+    plan = FaultPlan([FaultSpec(site="s", times=None,
+                                match=lambda ctx: ctx["backend"] == "pallas")])
+    plan.fire("s", backend="ref")
+    with pytest.raises(InjectedFault):
+        plan.fire("s", backend="pallas")
+    # non-matching occurrences are not even counted as seen
+    assert plan.specs("s")[0].seen == 1
+
+
+def test_exception_instance_raised_as_is():
+    boom = MemoryError("synthetic OOM")
+    plan = FaultPlan([FaultSpec(site="s", exc=boom)])
+    with pytest.raises(MemoryError) as ei:
+        plan.fire("s")
+    assert ei.value is boom
+
+
+def test_exception_class_instantiated_with_context():
+    plan = FaultPlan([FaultSpec(site="s", exc=RuntimeError)])
+    with pytest.raises(RuntimeError, match="injected fault at 's'"):
+        plan.fire("s")
+
+
+def test_latency_only_spec_sleeps_without_raising():
+    plan = FaultPlan([FaultSpec(site="s", exc=None, latency_s=0.05)])
+    t0 = time.monotonic()
+    plan.fire("s")                    # no raise
+    assert time.monotonic() - t0 >= 0.04
+    assert plan.fired("s") == 1
+
+
+def test_probabilistic_firing_is_seed_deterministic():
+    def pattern(seed):
+        plan = FaultPlan([FaultSpec(site="s", times=None, p=0.5)],
+                         seed=seed)
+        out = []
+        for _ in range(50):
+            try:
+                plan.fire("s")
+                out.append(0)
+            except InjectedFault:
+                out.append(1)
+        return out
+
+    a, b = pattern(7), pattern(7)
+    assert a == b                      # bit-for-bit replay
+    assert 0 < sum(a) < 50             # genuinely probabilistic
+    assert pattern(8) != a             # and seed-sensitive
+
+
+def test_reset_rewinds_counters_rng_and_log():
+    plan = FaultPlan([FaultSpec(site="s", times=1)], seed=3)
+    with pytest.raises(InjectedFault):
+        plan.fire("s", backend="pallas", op="gemm")
+    assert plan.log and plan.log[0][0] == "s"
+    plan.reset()
+    assert plan.fired() == 0 and plan.log == []
+    with pytest.raises(InjectedFault):   # fires again after the rewind
+        plan.fire("s")
+
+
+def test_log_keeps_only_scalar_context():
+    plan = FaultPlan([FaultSpec(site="s")])
+    with pytest.raises(InjectedFault):
+        plan.fire("s", backend="pallas", n=4, dims=(32, 32, 32),
+                  payload=object())
+    (_, _, ctx), = plan.log
+    assert ctx == {"backend": "pallas", "n": 4, "dims": (32, 32, 32)}
+
+
+def test_first_matching_spec_wins_then_later_specs_take_over():
+    plan = FaultPlan([FaultSpec(site="s", times=1, exc=KeyError),
+                      FaultSpec(site="s", times=None, exc=ValueError)])
+    with pytest.raises(KeyError):
+        plan.fire("s")
+    with pytest.raises(ValueError):    # first spec exhausted
+        plan.fire("s")
+    assert plan.fired("s") == 2
+
+
+def test_concurrent_firing_counts_exactly():
+    plan = FaultPlan([FaultSpec(site="s", times=None)])
+    n_threads, per_thread = 8, 50
+
+    def hammer():
+        for _ in range(per_thread):
+            try:
+                plan.fire("s")
+            except InjectedFault:
+                pass
+
+    threads = [threading.Thread(target=hammer) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert plan.fired("s") == n_threads * per_thread
+    assert plan.specs("s")[0].seen == n_threads * per_thread
