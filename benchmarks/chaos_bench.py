@@ -23,11 +23,28 @@ and checks the resilience *contract* end to end:
      both casualties are recorded, and a later retry recovers;
   5. **retuner refit failure** — a drift-triggered refit raises: the loop
      must count the failure, keep serving the old model, and complete the
-     retune on the next step once the fault clears.
+     retune on the next step once the fault clears;
+  6. **error-budget skip** — a rung that fails its whole rolling window
+     must be skipped OUTRIGHT by later buckets (zero attempts, zero
+     backoff sleeps) while serving continues on the fallback — and the
+     budget-gated ladder must be measurably faster than the same dead-rung
+     workload with budgets disabled (``budget_ladder_speedup``);
+  7. **half-open probe** — once the probe interval elapses a single
+     attempt is let through; on a healed rung it closes the breaker and
+     traffic returns to the primary backend;
+  8. **admission control** — deadline-infeasible requests and
+     above-threshold batch/exploration traffic shed synchronously at
+     submit while user traffic is still admitted, and brownout serves
+     backlogged buckets with ZERO model evaluations;
+  9. **torn snapshot recovery** — a decision-cache snapshot damaged on
+     disk recovers by dropping exactly the torn record (deep crash
+     recovery lives in ``benchmarks/recovery_bench.py``).
 
 Every metric is structural (pass/fail counts and flags) and the plan is
-seeded, so a scenario replays bit-for-bit on any host.  The committed
-trajectory lives in ``BENCH_chaos.json`` and is gated exactly by
+seeded, so a scenario replays bit-for-bit on any host — except the one
+wall-clock ratio ``budget_ladder_speedup``, which divides two runs of the
+same seeded workload on the same host and is gated with a wide floor.  The
+committed trajectory lives in ``BENCH_chaos.json`` and is gated by
 ``scripts/bench_diff.py --chaos-fresh``.
 
     PYTHONPATH=src python benchmarks/chaos_bench.py --smoke
@@ -54,8 +71,9 @@ from repro.core import (AdsalaRuntime, ModelRegistry,  # noqa: E402
                         install_subroutine)
 from repro.kernels import ops  # noqa: E402
 from repro.kernels.ops import run_op  # noqa: E402
-from repro.serving import (BlasService, FaultPlan, FaultSpec,  # noqa: E402
-                           Retuner, RetuneConfig, ServeConfig)
+from repro.serving import (AdmissionRejectedError, BlasService,  # noqa: E402
+                           FaultPlan, FaultSpec, Retuner, RetuneConfig,
+                           ServeConfig)
 
 BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_chaos.json"
 
@@ -69,14 +87,17 @@ def make(op, dims, seed=0):
 
 
 class _FixedSub:
-    """Stub subroutine whose "model" always picks one fixed knob."""
+    """Stub subroutine whose "model" always picks one fixed knob; its
+    evaluations are observable (brownout's zero-evals assertions)."""
 
     def __init__(self, knob, backend, op="gemm", dtype_bytes=4):
         self.backend, self.op, self.dtype_bytes = backend, op, dtype_bytes
         self.knob = knob
         self.artifact_version = 0
+        self.evals = 0
 
     def select(self, dims):
+        self.evals += 1
         return self.knob
 
 
@@ -253,6 +274,192 @@ def scenario_retuner_refit(n_samples: int, seed: int) -> dict:
     }
 
 
+def scenario_error_budget(seed: int, futures_seen: list) -> dict:
+    """A permanently dead rung: after one warmup bucket pays the full retry
+    schedule, every later bucket must skip the rung outright (zero kernel
+    attempts, zero backoff sleeps) — and the budget-gated ladder must beat
+    the ungated ladder on wall clock for the same workload."""
+    n_later = 6
+
+    def run(enabled: bool):
+        plan = FaultPlan([FaultSpec(site="kernel_execute", times=None,
+                                    match=lambda c:
+                                    c["backend"] == "cpu_blocked")],
+                         seed=seed)
+        rt = AdsalaRuntime(faults=plan)
+        cfg = ServeConfig(backend="cpu_blocked", max_batch=1, linger_ms=0.5,
+                          workers=1, min_steal=1, exec_retries=2,
+                          retry_backoff_s=0.03, error_budget=enabled,
+                          budget_window=8, budget_threshold=0.4,
+                          budget_min_count=2, budget_probe_interval_s=60.0)
+        reqs = [make("gemm", (16, 16, 16), seed=i)
+                for i in range(1 + n_later)]
+        t0 = time.perf_counter()
+        with BlasService(runtime=rt, config=cfg, faults=plan) as svc:
+            f0 = _track(futures_seen, [svc.submit("gemm", reqs[0])])[0]
+            f0.result(timeout=120)
+            fired_warmup = plan.fired("kernel_execute")
+            futs = _track(futures_seen,
+                          [svc.submit("gemm", r) for r in reqs[1:]])
+            for f in futs:
+                f.result(timeout=120)
+            fired_later = plan.fired("kernel_execute") - fired_warmup
+            stats = svc.stats
+        return (time.perf_counter() - t0, fired_warmup, fired_later, stats)
+
+    t_on, warm_on, later_on, stats_on = run(True)
+    t_off, _warm_off, later_off, stats_off = run(False)
+    return {
+        # warmup paid the full schedule (3 attempts), then zero attempts:
+        # the breaker opened and every later bucket skipped the dead rung
+        "budget_rung_skipped": bool(warm_on == 3 and later_on == 0),
+        "budget_skips_counted": bool(stats_on.budget_skips >= n_later),
+        "budget_all_served": bool(stats_on.failed == 0
+                                  and stats_off.failed == 0
+                                  and later_off == 3 * n_later),
+        "budget_ladder_speedup": round(t_off / t_on, 2),
+    }
+
+
+def scenario_budget_probe(seed: int, futures_seen: list) -> dict:
+    """Half-open recovery: the fault dies with the warmup bucket, the next
+    bucket is skipped (breaker open), and after the probe interval one
+    probe attempt closes the breaker — traffic returns to the primary."""
+    plan = FaultPlan([FaultSpec(site="kernel_execute", times=3,
+                                match=lambda c:
+                                c["backend"] == "cpu_blocked")],
+                     seed=seed)
+    rt = AdsalaRuntime(faults=plan)
+    cfg = ServeConfig(backend="cpu_blocked", max_batch=1, linger_ms=0.5,
+                      workers=1, min_steal=1, exec_retries=2,
+                      retry_backoff_s=0.0, budget_window=8,
+                      budget_threshold=0.4, budget_min_count=2,
+                      budget_probe_interval_s=0.25)
+    with BlasService(runtime=rt, config=cfg, faults=plan) as svc:
+        for _ in range(2):               # warmup (opens) + one skipped
+            f = _track(futures_seen,
+                       [svc.submit("gemm", make("gemm", (16, 16, 16)))])[0]
+            f.result(timeout=120)
+        skipped = svc.stats.budget_skips
+        fallbacks_before = svc.stats.fallback_executions
+        time.sleep(0.3)                  # past the probe interval
+        f = _track(futures_seen,
+                   [svc.submit("gemm", make("gemm", (16, 16, 16)))])[0]
+        f.result(timeout=120)            # probe attempt: fault exhausted
+        state = svc.budget_state().get(("cpu_blocked", "gemm"), {})
+        return {
+            "budget_probe_recovers": bool(
+                skipped >= 1 and svc.stats.budget_probes == 1
+                and state.get("state") == "closed"
+                and svc.stats.fallback_executions == fallbacks_before),
+        }
+
+
+def scenario_admission(seed: int, futures_seen: list) -> dict:
+    """Overload sheds at the front door: backlogged batch/exploration
+    traffic is rejected at its threshold while user traffic is admitted;
+    a deadline the bucket's observed queue delay cannot meet is rejected
+    before it ever parks; brownout serves with zero model evaluations."""
+    # priority shedding: one worker held by an injected latency while user
+    # traffic fills the buffer to the shed thresholds
+    plan = FaultPlan([FaultSpec(site="stacked_execute", exc=None,
+                                latency_s=0.25, times=None)], seed=seed)
+    cfg = ServeConfig(backend="ref", max_batch=1, linger_ms=0.5, workers=1,
+                      min_steal=1, max_pending=8, shed_explore_at=0.25,
+                      shed_batch_at=0.5)
+    reqs = [make("gemm", (16, 16, 16), seed=i) for i in range(4)]
+    with BlasService(runtime=AdsalaRuntime(), config=cfg,
+                     faults=plan) as svc:
+        futs = _track(futures_seen, [svc.submit("gemm", r) for r in reqs])
+        shed = 0
+        for prio in ("exploration", "batch"):   # 4 in flight >= 2 and >= 4
+            try:
+                svc.submit("gemm", reqs[0], priority=prio)
+            except AdmissionRejectedError:
+                shed += 1
+        for f in futs:
+            f.result(timeout=120)
+        priority_ok = (shed == 2 and svc.stats.shed_priority == 2
+                       and svc.stats.completed == len(reqs)
+                       and svc.stats.failed == 0)
+
+    # deadline shedding: the bucket's recorded queue delay says 0.5s, the
+    # request allows 0.05s — rejected synchronously, zero evals spent
+    rt = AdsalaRuntime()
+    rt.record_batch("gemm", (16, 16, 16), 4, "ref", 1,
+                    queue_seconds=0.5, exec_items=1)
+    cfg2 = ServeConfig(backend="ref", max_batch=1, linger_ms=0.5, workers=1,
+                       min_steal=1)
+    with BlasService(runtime=rt, config=cfg2) as svc2:
+        try:
+            svc2.submit("gemm", reqs[0], deadline=0.05)
+            deadline_ok = False
+        except AdmissionRejectedError:
+            deadline_ok = svc2.stats.shed_deadline == 1
+
+    # brownout: past the backlog threshold every bucket serves
+    # cached-or-default knobs — the registered model is never evaluated
+    rt3 = AdsalaRuntime()
+    sub = _FixedSub(get_backend("ref").default_knob("gemm"), "ref")
+    rt3.register(sub)
+    cfg3 = ServeConfig(backend="ref", max_batch=1, linger_ms=0.5, workers=1,
+                       min_steal=1, brownout_pending=1)
+    with BlasService(runtime=rt3, config=cfg3) as svc3:
+        futs = _track(futures_seen, [svc3.submit("gemm", r) for r in reqs])
+        for f in futs:
+            f.result(timeout=120)
+        brownout_ok = (sub.evals == 0 and rt3.stats.model_evals == 0
+                       and svc3.stats.brownout_batches >= 1
+                       and svc3.stats.failed == 0)
+        brownout_batches = svc3.stats.brownout_batches
+    # control: the same workload without brownout DOES evaluate the model
+    # (otherwise the zero-evals assertion above is vacuous)
+    rt4 = AdsalaRuntime()
+    sub4 = _FixedSub(get_backend("ref").default_knob("gemm"), "ref")
+    rt4.register(sub4)
+    with BlasService(runtime=rt4, config=cfg2) as svc4:
+        futs = _track(futures_seen, [svc4.submit("gemm", r) for r in reqs])
+        for f in futs:
+            f.result(timeout=120)
+    return {
+        "admission_priority_shed": bool(priority_ok),
+        "admission_deadline_shed": bool(deadline_ok),
+        "brownout_zero_evals": bool(brownout_ok),
+        "brownout_batches": int(brownout_batches),
+        "brownout_control_evals": int(sub4.evals),
+    }
+
+
+def scenario_torn_snapshot(seed: int) -> dict:
+    """One decision-cache snapshot record damaged on disk: warm start drops
+    exactly the torn record and imports the survivors (the full crash
+    matrix lives in recovery_bench)."""
+    from repro.core.durable import MAGIC
+    shapes = [(32, 32, 32), (64, 64, 64)]
+    with tempfile.TemporaryDirectory() as td:
+        reg = ModelRegistry(td)
+        rt = AdsalaRuntime()
+        rt.register(_FixedSub(get_backend("cpu_blocked").default_knob("gemm"),
+                              "cpu_blocked"))
+        for d in shapes:
+            rt.select("gemm", d, 4, backend="cpu_blocked")
+        path = reg.save_decision_cache(rt)
+        lines = path.read_text().splitlines()
+        assert lines[0] == MAGIC
+        lines[2] = "00000000" + lines[2][8:]     # oldest entry: bad CRC
+        path.write_text("\n".join(lines) + "\n")
+        warm = AdsalaRuntime()
+        warm.register(_FixedSub(
+            get_backend("cpu_blocked").default_knob("gemm"), "cpu_blocked"))
+        imported = ModelRegistry(td).load_decision_cache(warm)
+        return {
+            "torn_snapshot_recovered": bool(
+                imported == 1 and [tuple(e["dims"])
+                                   for e in warm.export_cache()]
+                == [(64, 64, 64)]),
+        }
+
+
 def run_scenarios(*, n_per_op: int = 4, n_samples: int = 12,
                   seed: int = 0) -> dict:
     futures_seen: list = []
@@ -263,6 +470,10 @@ def run_scenarios(*, n_per_op: int = 4, n_samples: int = 12,
                                          futures_seen))
     metrics.update(scenario_artifact_load(n_samples, seed))
     metrics.update(scenario_retuner_refit(n_samples, seed))
+    metrics.update(scenario_error_budget(seed, futures_seen))
+    metrics.update(scenario_budget_probe(seed, futures_seen))
+    metrics.update(scenario_admission(seed, futures_seen))
+    metrics.update(scenario_torn_snapshot(seed))
     # the headline contract: every future ever submitted has resolved
     metrics["hung_futures"] = sum(not f.done() for f in futures_seen)
     metrics["futures_submitted"] = len(futures_seen)
@@ -282,7 +493,21 @@ STRUCTURAL = (("crash_storm_failed", 0),
               ("refit_failure_survived", True),
               ("refit_served_old_model", True),
               ("refit_recovered_next_step", True),
+              ("budget_rung_skipped", True),
+              ("budget_skips_counted", True),
+              ("budget_all_served", True),
+              ("budget_probe_recovers", True),
+              ("admission_priority_shed", True),
+              ("admission_deadline_shed", True),
+              ("brownout_zero_evals", True),
+              ("torn_snapshot_recovered", True),
               ("hung_futures", 0))
+
+#: floor for the enabled/disabled wall-clock ratio of the dead-rung
+#: workload — the ungated ladder pays 3 attempts + backoff sleeps per
+#: bucket where the gated one skips outright, so real values sit well
+#: above 2x; 1.2x only catches the gate silently not engaging
+SPEEDUP_FLOOR = 1.2
 
 
 def check(metrics: dict) -> list[str]:
@@ -293,6 +518,15 @@ def check(metrics: dict) -> list[str]:
         bad.append("crash_storm_fallback_executions=0 (want >=1)")
     if metrics["worker_respawns"] < 1:
         bad.append("worker_respawns=0 (want >=1)")
+    if metrics["budget_ladder_speedup"] < SPEEDUP_FLOOR:
+        bad.append(f"budget_ladder_speedup="
+                   f"{metrics['budget_ladder_speedup']} "
+                   f"(want >={SPEEDUP_FLOOR})")
+    if metrics["brownout_batches"] < 1:
+        bad.append("brownout_batches=0 (want >=1)")
+    if metrics["brownout_control_evals"] < 1:
+        bad.append("brownout_control_evals=0 (want >=1 — the brownout "
+                   "zero-evals gate would be vacuous)")
     return bad
 
 

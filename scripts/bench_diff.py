@@ -41,9 +41,19 @@ Three trajectories:
     fault-injection resilience contract — every submitted future resolves
     (zero hung), crash storms degrade to bit-identical ref results, a
     poisoned knob is quarantined and recovers after its TTL, worker deaths
-    lose no requests, artifact-load faults stay isolated, and a failed
-    refit survives and completes on the next step.  All structural flags,
-    compared exact — the scenarios are seeded and deterministic.
+    lose no requests, artifact-load faults stay isolated, a failed refit
+    survives and completes on the next step, an over-budget rung is
+    skipped outright (and the gated ladder beats the ungated one on wall
+    clock), overload sheds at submit, and brownout serves with zero model
+    evals.  All structural flags compared exact (the scenarios are seeded
+    and deterministic) except the budget-ladder wall-clock ratio, which
+    gets a wide same-host floor.
+  * ``BENCH_recovery.json`` (gated when ``--recovery-fresh`` is given):
+    the crash-recovery contract — a process SIGKILLed mid-snapshot
+    recovers the snapshot+journal union with zero lost futures and zero
+    model evals on recovered shapes, torn journal appends and corrupt/
+    garbage snapshot records are dropped with exact counts, and an open
+    knob quarantine survives the crash.  All structural, compared exact.
 
     PYTHONPATH=src python scripts/bench_diff.py
     PYTHONPATH=src python scripts/bench_diff.py --fresh /tmp/smoke.json \
@@ -68,6 +78,7 @@ KERNELS_PATH = REPO_ROOT / "BENCH_kernels.json"
 MODEL_PATH = REPO_ROOT / "BENCH_model.json"
 RETUNE_PATH = REPO_ROOT / "BENCH_retune.json"
 CHAOS_PATH = REPO_ROOT / "BENCH_chaos.json"
+RECOVERY_PATH = REPO_ROOT / "BENCH_recovery.json"
 
 #: summary-level ratios under the standard (--tolerance) gate
 GATED_SUMMARY = ("cold_median_speedup", "batch_speedup")
@@ -90,7 +101,9 @@ _RECORDERS = {"decision": "benchmarks/decision_bench.py (full mode)",
               "retune": "benchmarks/retune_bench.py --smoke --record "
                         "<entry>",
               "chaos": "benchmarks/chaos_bench.py --smoke --record "
-                       "<entry>"}
+                       "<entry>",
+              "recovery": "benchmarks/recovery_bench.py --smoke --record "
+                          "<entry>"}
 
 
 def committed_baseline(path: Path) -> tuple[str, dict]:
@@ -271,13 +284,52 @@ def gate_chaos(fresh_json: Path, bench: Path, failures: list) -> None:
               f"{got!r} (must be {want!r})")
         if not ok:
             failures.append(f"chaos.{key} (vs {entry_id})")
-    for key in ("crash_storm_fallback_executions", "worker_respawns"):
+    for key in ("crash_storm_fallback_executions", "worker_respawns",
+                "brownout_batches", "brownout_control_evals"):
         got = fresh.get(key, 0)
         ok = got >= 1
         print(f"[bench_diff] {'ok ' if ok else 'REG'} chaos.{key}: "
               f"{got} (must be >=1)")
         if not ok:
             failures.append(f"chaos.{key}")
+    speedup = fresh.get("budget_ladder_speedup")
+    if speedup is not None:
+        floor = chaos_bench.SPEEDUP_FLOOR
+        ok = speedup >= floor
+        print(f"[bench_diff] {'ok ' if ok else 'REG'} "
+              f"chaos.budget_ladder_speedup: {speedup:.2f}x "
+              f"(floor {floor:.2f}x — the gated ladder must beat the "
+              f"ungated one on a dead rung)")
+        if not ok:
+            failures.append("chaos.budget_ladder_speedup")
+
+
+def gate_recovery(fresh_json: Path, bench: Path, failures: list) -> None:
+    """Crash-recovery contract: every structural flag of the recovery
+    scenarios compared EXACT against the bench's own pass criteria — zero
+    lost futures, zero model evals on recovered shapes, exact torn/corrupt
+    record drop counts.  Deterministic; any drift is a code change."""
+    import recovery_bench
+    entry_id, _base = committed_baseline(bench)
+    data = json.loads(fresh_json.read_text())
+    fresh = data.get("smoke_baseline") or data["summary"]
+    for key, want in recovery_bench.STRUCTURAL:
+        got = fresh.get(key)
+        ok = got == want
+        print(f"[bench_diff] {'ok ' if ok else 'REG'} recovery.{key}: "
+              f"{got!r} (must be {want!r})")
+        if not ok:
+            failures.append(f"recovery.{key} (vs {entry_id})")
+    for key, want in (("sigkill_snapshot_records",
+                       len(recovery_bench.SNAP_SHAPES)),
+                      ("sigkill_journal_records",
+                       len(recovery_bench.JOURNAL_SHAPES) + 1)):
+        got = fresh.get(key)
+        ok = got == want
+        print(f"[bench_diff] {'ok ' if ok else 'REG'} recovery.{key}: "
+              f"{got!r} (must be {want!r})")
+        if not ok:
+            failures.append(f"recovery.{key}")
 
 
 def main(argv=None) -> int:
@@ -313,6 +365,12 @@ def main(argv=None) -> int:
                         "PATH); gates BENCH_chaos.json when given")
     p.add_argument("--chaos-bench", type=Path, default=CHAOS_PATH,
                    help="committed chaos trajectory file")
+    p.add_argument("--recovery-fresh", type=Path, default=None,
+                   help="fresh crash-recovery metrics (recovery_bench "
+                        "--smoke --json PATH); gates BENCH_recovery.json "
+                        "when given")
+    p.add_argument("--recovery-bench", type=Path, default=RECOVERY_PATH,
+                   help="committed crash-recovery trajectory file")
     p.add_argument("--tolerance", type=float, default=0.25,
                    help="allowed fractional regression per metric")
     args = p.parse_args(argv)
@@ -357,6 +415,8 @@ def main(argv=None) -> int:
                     args.tolerance, failures)
     if args.chaos_fresh is not None:
         gate_chaos(args.chaos_fresh, args.chaos_bench, failures)
+    if args.recovery_fresh is not None:
+        gate_recovery(args.recovery_fresh, args.recovery_bench, failures)
 
     if failures:
         print(f"[bench_diff] FAILED vs entry {entry_id!r}: "

@@ -19,6 +19,7 @@ from pathlib import Path
 import msgpack
 import numpy as np
 
+from .durable import DurableStore, is_durable, read_records, write_snapshot
 from .knobs import KnobSpace
 from .ml import make_model
 from .preprocess import PreprocessPipeline
@@ -160,6 +161,9 @@ class ModelRegistry:
         #: (path, error) pairs from the most recent :meth:`load_into` —
         #: artifacts that failed to load and were skipped
         self.last_load_errors: list[tuple[str, str]] = []
+        #: recovery accounting of the most recent :meth:`load_decision_cache`
+        self.last_recovery: dict[str, object] = {}
+        self._decision_store: DurableStore | None = None
 
     @property
     def versions_path(self) -> Path:
@@ -170,6 +174,17 @@ class ModelRegistry:
         if not path.exists():
             return {}
         try:
+            if is_durable(path):
+                # checksummed snapshot: one {"versions": {...}} record; a
+                # torn record reads as empty (versions restart at 0 —
+                # caches stamped by the lost generations are then merely
+                # dropped at warm start, never replayed wrongly)
+                out: dict[str, int] = {}
+                for rec in read_records(path)[0]:
+                    for k, v in rec.get("versions", {}).items():
+                        out[str(k)] = max(out.get(str(k), 0), int(v))
+                return out
+            # legacy plain-JSON sidecar (pre-durable stores)
             return {str(k): int(v)
                     for k, v in json.loads(path.read_text()).items()}
         except (ValueError, OSError):
@@ -192,9 +207,8 @@ class ModelRegistry:
             versions[name] = max(versions.get(name, 0),
                                  int(getattr(sub, "artifact_version", 0))) + 1
             sub.artifact_version = versions[name]
-            _atomic_write(self.versions_path,
-                          json.dumps(versions, indent=1, sort_keys=True)
-                          .encode())
+            write_snapshot(self.versions_path, [{"versions": versions}],
+                           faults=self._faults)
         return save_subroutine(sub, self.root)
 
     def load_all(self, backend: str | None = None) -> list[TunedSubroutine]:
@@ -249,34 +263,99 @@ class ModelRegistry:
     #: filename of the persisted runtime decision cache (beside the models)
     DECISION_CACHE = "decision_cache.json"
 
+    #: decision-cache snapshot schema written by this library (durable
+    #: format; v1/v2 legacy plain-JSON payloads still load)
+    DECISION_CACHE_VERSION = 3
+
     @property
     def decision_cache_path(self) -> Path:
         return self.root / self.DECISION_CACHE
+
+    def _cache_store(self) -> DurableStore:
+        store = self._decision_store
+        if store is None:
+            store = self._decision_store = DurableStore(
+                self.decision_cache_path, faults=self._faults)
+        return store
 
     def save_decision_cache(self, runtime) -> Path:
         """Persist the runtime's LRU decision cache beside the artifacts so a
         restarted server warm-starts past the cold model evaluations.
 
-        Payload v2: every entry carries the ``artifact_version`` of the
-        subroutine that made the decision, so a restart after a reinstall
-        or an online retune rejects the stale entries instead of replaying
-        the predecessor model's knobs with zero evals and no warning."""
-        payload = {"version": 2, "entries": runtime.export_cache()}
-        _atomic_write(self.decision_cache_path,
-                      json.dumps(payload, indent=1).encode())
+        Snapshot v3 is the durable checksummed format (one header record +
+        one record per :meth:`~repro.core.runtime.AdsalaRuntime.export_cache`
+        entry); a successful snapshot absorbs and truncates the incremental
+        decision journal.  Every entry carries the ``artifact_version`` of
+        the subroutine that made the decision, so a restart after a
+        reinstall or an online retune rejects the stale entries instead of
+        replaying the predecessor model's knobs with zero evals and no
+        warning."""
+        header = {"header": 1, "version": self.DECISION_CACHE_VERSION}
+        self._cache_store().snapshot([header] + runtime.export_cache())
         return self.decision_cache_path
+
+    def journal_decision(self, record: dict) -> None:
+        """Append one incremental decision/quarantine record (an
+        ``export_cache``-shaped dict) to the decision journal — the
+        crash-safety increment between snapshots.  Wire this as
+        ``runtime.decision_journal`` so every new cached decision survives
+        a crash that never reached the next :meth:`save_decision_cache`."""
+        self._cache_store().append(record)
 
     def load_decision_cache(self, runtime) -> int:
         """Warm-start ``runtime`` from a persisted decision cache; returns
         the number of imported decisions (0 when no cache file exists).
+
+        Recovery is corruption-tolerant: torn/corrupt records in the
+        snapshot or journal are dropped (counted in :attr:`last_recovery`
+        and, for malformed-but-checksummed records, in the runtime's
+        ``import_drops_corrupt``) and a fully unreadable legacy payload
+        degrades to a cold start — a crashed writer must never stop the
+        server from starting.  A *well-formed* snapshot from a NEWER
+        library still raises ``ValueError``: that is an operator error
+        (downgrade), not corruption.  Journal records are imported after
+        the snapshot's, so incremental updates win on key collisions.
         v1 caches (persisted before artifact versioning) load with their
         entries treated as version 0 — they only warm-start version-0
         (never-registry-stamped) subroutines."""
         path = self.decision_cache_path
-        if not path.exists():
+        self.last_recovery = {"snapshot_records": 0, "journal_records": 0,
+                              "dropped_records": 0, "cold_start": False}
+        entries: list[dict] = []
+        if path.exists():
+            if is_durable(path):
+                snap, dropped = read_records(path)
+                headers = [r for r in snap if r.get("header")]
+                if headers and int(headers[0].get("version", 0)) > \
+                        self.DECISION_CACHE_VERSION:
+                    raise ValueError(
+                        f"{path}: decision-cache snapshot "
+                        f"v{headers[0]['version']} is newer than this "
+                        f"library's v{self.DECISION_CACHE_VERSION}")
+                entries = [r for r in snap if not r.get("header")]
+                self.last_recovery["dropped_records"] += dropped
+            else:
+                try:
+                    payload = json.loads(path.read_text())
+                except ValueError:
+                    # torn legacy write / garbage file: cold start, never
+                    # propagate — warm start is an optimisation
+                    payload = None
+                if isinstance(payload, dict):
+                    if int(payload.get("version", 1)) not in (1, 2):
+                        raise ValueError(
+                            f"{path}: unknown decision-cache version "
+                            f"{payload.get('version')!r}")
+                    entries = [e for e in payload.get("entries") or []
+                               if isinstance(e, dict)]
+                else:
+                    self.last_recovery["cold_start"] = True
+                    self.last_recovery["dropped_records"] += 1
+        self.last_recovery["snapshot_records"] = len(entries)
+        journal, j_dropped = read_records(self._cache_store().journal_path)
+        self.last_recovery["journal_records"] = len(journal)
+        self.last_recovery["dropped_records"] += j_dropped
+        entries.extend(journal)
+        if not entries:
             return 0
-        payload = json.loads(path.read_text())
-        if int(payload.get("version", 1)) not in (1, 2):
-            raise ValueError(f"{path}: unknown decision-cache version "
-                             f"{payload.get('version')!r}")
-        return runtime.import_cache(payload["entries"])
+        return runtime.import_cache(entries)

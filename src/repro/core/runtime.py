@@ -220,6 +220,13 @@ class RuntimeStats:
     #: miss-path model evaluations that raised; select_or_default served the
     #: caller's default config instead of failing the BLAS call
     eval_failures: int = 0
+    #: import_cache entries dropped as structurally malformed (missing
+    #: fields, wrong types — a payload that passed the durable checksums or
+    #: came from a legacy file but does not parse as a record)
+    import_drops_corrupt: int = 0
+    #: decision-journal appends that raised (persistence is best-effort on
+    #: the hot path — a full disk must cost durability, not availability)
+    journal_failures: int = 0
     #: process-global resolve-time backend fallbacks, per
     #: (requested, resolved) pair (from repro.backends.registry) — how often
     #: dispatch silently degraded, e.g. pallas→ref when pallas is absent
@@ -299,6 +306,16 @@ class AdsalaRuntime:
         self._hits_local = threading.local()
         self._hit_stripes: list[_HitStripe] = []
         self._base = RuntimeStats()        # mutated only under the lock
+        #: optional incremental persistence hook (e.g. bound to
+        #: ``ModelRegistry.journal_decision``): called best-effort, outside
+        #: the lock, with one export_cache-shaped record per NEW cached
+        #: decision and per quarantine opened.  Failures are counted
+        #: (``stats.journal_failures``), never raised.
+        self.decision_journal = None
+        # error-budget ledger riding export/import (attach_budgets); budget
+        # records imported before a ledger is attached are parked here
+        self._budgets = None
+        self._pending_budget_records: list[dict] = []
         # prebound lock-free readers (the dicts/lists are mutated in place,
         # never replaced, so these stay valid for the runtime's life)
         self._cache_get = self._cache_mirror.get
@@ -339,6 +356,8 @@ class AdsalaRuntime:
                 quarantine_forced=base.quarantine_forced,
                 import_drops_quarantine=base.import_drops_quarantine,
                 eval_failures=base.eval_failures,
+                import_drops_corrupt=base.import_drops_corrupt,
+                journal_failures=base.journal_failures,
                 backends={n: dataclasses.replace(b)
                           for n, b in base.backends.items()},
                 buckets={k: dataclasses.replace(b)
@@ -473,6 +492,40 @@ class AdsalaRuntime:
             self._base.swap_invalidations += len(stale)
         return len(stale)
 
+    # -- error budgets / incremental persistence seams ------------------------
+    def attach_budgets(self, ledger) -> None:
+        """Hook an :class:`~repro.serving.budget.ErrorBudgetLedger` into
+        warm-state persistence: its records ride :meth:`export_cache`, and
+        ``{"budget": 1}`` records seen by :meth:`import_cache` (including
+        any imported *before* this attach) are restored into it."""
+        with self._lock:
+            self._budgets = ledger
+            pending = self._pending_budget_records
+            self._pending_budget_records = []
+        if pending:
+            ledger.import_records(pending)
+
+    def attached_budgets(self):
+        """The attached error-budget ledger, or None."""
+        return self._budgets
+
+    def _decision_record(self, key: tuple, knob: Knob) -> dict:
+        return {"backend": key[0], "op": key[1], "dtype_bytes": int(key[2]),
+                "dims": [int(d) for d in key[3]], "knob": knob.dict,
+                "artifact_version": self._version_of(key[:3])}
+
+    def _notify_journal(self, record: dict) -> None:
+        """Best-effort incremental persistence: runs OUTSIDE the runtime
+        lock (it does file I/O), never raises into the decision path."""
+        fn = self.decision_journal
+        if fn is None:
+            return
+        try:
+            fn(record)
+        except Exception:        # noqa: BLE001 — durability, not availability
+            with self._lock:
+                self._base.journal_failures += 1
+
     # -- knob quarantine (TTL'd circuit breakers) -----------------------------
     def quarantine_knob(self, op: str, dtype_bytes: int, backend: str,
                         knob: Knob, *, fallback: Knob,
@@ -504,6 +557,14 @@ class AdsalaRuntime:
             for k in stale:
                 del self._cache[k]
                 self._cache_mirror.pop(k, None)
+        if self.decision_journal is not None:
+            # an opened breaker must survive a crash before the next full
+            # snapshot — a crashing knob coming back on restart is exactly
+            # the failure mode quarantines exist to prevent
+            self._notify_journal(
+                {"quarantine": 1, "backend": backend, "op": op,
+                 "dtype_bytes": int(dtype_bytes), "knob": knob.dict,
+                 "fallback_knob": fallback_knob.dict, "ttl_s": float(ttl_s)})
         return len(stale)
 
     def unquarantine(self, op: str, dtype_bytes: int, backend: str,
@@ -623,6 +684,15 @@ class AdsalaRuntime:
             dims = tuple(dims)
         return self._cache_get((backend, op, dtype_bytes, dims))
 
+    def bucket_stats_peek(self, key: tuple) -> BucketStats | None:
+        """Lock-free probe of one shape bucket's LIVE stats object, keyed
+        ``(backend, op, dtype_bytes, dims)`` — or None before its first
+        recorded batch.  Relaxed by design (a racing ``record_batch`` may
+        be mid-update): the serving admission controller reads
+        ``mean_queue`` from it as an *estimate* on every submit, which must
+        not take the runtime lock."""
+        return self._base.buckets.get(key)
+
     def backends(self) -> tuple[str, ...]:
         """Backend names with at least one registered subroutine."""
         with self._lock:
@@ -717,12 +787,16 @@ class AdsalaRuntime:
         knob = fast.select(key[3]) if fast is not None else sub.select(key[3])
         shard.count_eval(time.perf_counter() - t0)
         knob, store_ok = self._apply_quarantine(sub_key, knob)
+        stored = False
         with self._lock:
             # a hot swap invalidated this subroutine's cache entries while
             # we were evaluating: our knob may be the OLD model's decision —
             # return it (this call was in flight) but never store it
             if store_ok and self._swap_epochs.get(sub_key, 0) == epoch:
                 self._store_locked(key, knob)
+                stored = True
+        if stored and self.decision_journal is not None:
+            self._notify_journal(self._decision_record(key, knob))
         return knob
 
     def _store_locked(self, key: tuple, knob: Knob) -> None:
@@ -857,6 +931,7 @@ class AdsalaRuntime:
                 continue
             by_sub.setdefault(key[:3], []).append(key)
         no_store: set[tuple] = set()          # quarantine-forced decisions
+        stored_keys: list[tuple] = []         # journaled after the release
         try:
             for sub_key, keys in by_sub.items():
                 sub = self._subs_get(sub_key)
@@ -901,6 +976,7 @@ class AdsalaRuntime:
                                 and self._swap_epochs.get(
                                     key[:3], 0) == epochs[key[:3]]:
                             self._store_locked(key, knob)
+                            stored_keys.append(key)
         finally:
             # release owned entries BEFORE waiting on anyone else's (no
             # wait cycles possible); a failed evaluation releases with
@@ -915,6 +991,12 @@ class AdsalaRuntime:
                     for key in keys:
                         if key in owned:
                             shard.inflight.pop(key, None)
+        # incremental persistence AFTER the in-flight release: journal file
+        # I/O must never hold followers on the shared event
+        if stored_keys and self.decision_journal is not None:
+            for key in stored_keys:
+                self._notify_journal(self._decision_record(key,
+                                                           resolved[key]))
         # absorb keys someone else was already evaluating — their eval,
         # their eval-count; recorded as a hit only when hits are recorded.
         # An entry whose epoch predates our snapshot is a pre-swap leader
@@ -979,11 +1061,16 @@ class AdsalaRuntime:
         Active knob quarantines are exported too (``{"quarantine": 1, ...}``
         records, prepended, TTL rebased to *remaining* seconds): a crashing
         knob must stay benched across a warm restart, not get a fresh shot
-        because the process recycled."""
+        because the process recycled.  An attached error-budget ledger's
+        rungs (``{"budget": 1, ...}`` records, first) ride along the same
+        way — a rung that exhausted its budget stays skipped after a
+        restart."""
+        led = self._budgets
+        budget_records = led.export() if led is not None else []
         with self._lock:
             self._fold_touches_locked()
             now = time.monotonic()
-            out: list[dict] = [
+            out: list[dict] = budget_records + [
                 {"quarantine": 1, "backend": qk[0], "op": qk[1],
                  "dtype_bytes": int(qk[2]), "knob": qk[3].dict,
                  "fallback_knob": fb.dict, "ttl_s": deadline - now}
@@ -1027,30 +1114,58 @@ class AdsalaRuntime:
 
         Entries for unregistered subroutines import as-is — there is no
         model or space to validate against yet.
+
+        Malformed entries — wrong types, missing fields, non-dict garbage
+        (a corrupted persisted payload) — are dropped and counted
+        (``stats.import_drops_corrupt``), never raised: recovery from a
+        damaged cache file must cost warm starts, not availability.
+        ``{"budget": 1}`` records restore the attached error-budget ledger
+        (parked until :meth:`attach_budgets` when none is attached yet) and
+        are not counted as imported decisions.
         """
         if self._faults is not None:
             self._faults.fire("cache_import", entries=len(entries))
+        budget_records = [e for e in entries
+                          if isinstance(e, dict) and e.get("budget")]
+        if budget_records:
+            led = self._budgets
+            if led is not None:
+                led.import_records(budget_records)
+            else:
+                with self._lock:
+                    self._pending_budget_records.extend(budget_records)
         n = 0
         with self._lock:
             self._fold_touches_locked()
             now = time.monotonic()
             for e in entries:
-                if e.get("quarantine"):
+                if not isinstance(e, dict) or not e.get("quarantine"):
+                    continue
+                try:
                     qkey = (str(e["backend"]), str(e["op"]),
                             int(e["dtype_bytes"]),
                             Knob(tuple(sorted(e["knob"].items()))))
                     fb = Knob(tuple(sorted(e["fallback_knob"].items())))
                     self._quarantined[qkey] = (now + float(e["ttl_s"]), fb)
+                except Exception:    # noqa: BLE001 — corrupt record
+                    self._base.import_drops_corrupt += 1
             for e in entries:
-                if e.get("quarantine"):
+                if not isinstance(e, dict):
+                    self._base.import_drops_corrupt += 1
                     continue
-                key = (str(e["backend"]), str(e["op"]), int(e["dtype_bytes"]),
-                       tuple(int(d) for d in e["dims"]))
-                knob = Knob(tuple(sorted(e["knob"].items())))
+                if e.get("quarantine") or e.get("budget"):
+                    continue
+                try:
+                    key = (str(e["backend"]), str(e["op"]),
+                           int(e["dtype_bytes"]),
+                           tuple(int(d) for d in e["dims"]))
+                    knob = Knob(tuple(sorted(e["knob"].items())))
+                    version = int(e.get("artifact_version", 0))
+                except Exception:    # noqa: BLE001 — corrupt record
+                    self._base.import_drops_corrupt += 1
+                    continue
                 sub = self._subs.get(key[:3])
-                if sub is not None and \
-                        int(e.get("artifact_version", 0)) != \
-                        self._version_of(key[:3]):
+                if sub is not None and version != self._version_of(key[:3]):
                     self._base.import_drops_version += 1
                     continue
                 space = getattr(sub, "knob_space", None)

@@ -5,25 +5,33 @@
     ServeStats  — service-level counters (per-bucket detail on the runtime)
     Retuner     — drift-aware online retraining loop (opt-in; pass one to
                   BlasService to close the serving→install feedback loop)
+    ErrorBudgetLedger — per-(backend, op) rolling failure budgets gating the
+                  degradation ladder (over-budget rungs skip their retries)
     FaultPlan   — deterministic seeded fault injection (chaos harness); give
                   one plan to the service/runtime/retuner to drive every
                   failure path on purpose
 
 Failure semantics: every submitted request resolves — result, or a typed
-error (ServiceClosedError / DeadlineExpiredError / ExecutionFailedError).
+error (ServiceClosedError / DeadlineExpiredError / ExecutionFailedError);
+overload is shed synchronously at submit with AdmissionRejectedError.
 See ``repro/serving/service.py`` for the life-of-a-request diagram and the
-degradation ladder, ``repro/serving/retune.py`` for the drift/refit/hot-swap
+budget-gated degradation ladder, ``repro/serving/budget.py`` for the error
+budgets, ``repro/serving/retune.py`` for the drift/refit/hot-swap
 semantics, ``repro/serving/faults.py`` for the named injection sites, and
-``benchmarks/chaos_bench.py`` for the seeded fault scenarios.
+``benchmarks/chaos_bench.py`` / ``benchmarks/recovery_bench.py`` for the
+seeded fault and crash-recovery scenarios.
 """
 
+from .budget import BudgetConfig, ErrorBudgetLedger
 from .faults import FaultPlan, FaultSpec, InjectedFault
 from .retune import Retuner, RetuneConfig, RetuneStats
-from .service import (BlasService, DeadlineExpiredError, ExecutionFailedError,
+from .service import (AdmissionRejectedError, BlasService,
+                      DeadlineExpiredError, ExecutionFailedError,
                       ServeConfig, ServeStats, ServiceClosedError, bucket_key)
 
 __all__ = ["BlasService", "ServeConfig", "ServeStats", "bucket_key",
            "Retuner", "RetuneConfig", "RetuneStats",
+           "BudgetConfig", "ErrorBudgetLedger",
            "FaultPlan", "FaultSpec", "InjectedFault",
            "ServiceClosedError", "DeadlineExpiredError",
-           "ExecutionFailedError"]
+           "ExecutionFailedError", "AdmissionRejectedError"]

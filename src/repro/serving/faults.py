@@ -36,6 +36,17 @@ Named sites (the contract between the chaos harness and the stack):
                          supervisor must recover from
     ``retuner_observe``  Retuner.observe entry (ctx: none)
     ``retuner_refit``    Retuner.retune, before the refit (ctx: sub_key)
+    ``snapshot_write``   core.durable atomic snapshot writers, before the
+                         temp file is created (ctx: path, size).  A plain
+                         raise models a crash *before* the write (the old
+                         snapshot survives untouched); an injected latency
+                         holds the writer mid-write (the recovery bench
+                         SIGKILLs the process inside this window); raising
+                         :class:`TornWrite` persists a truncated payload at
+                         the final path before propagating
+    ``journal_append``   core.durable journal appends, before the write
+                         (ctx: path, size); TornWrite tears the record at
+                         a seeded fraction of its bytes
 
 Matching is by site name, then an optional ``match(ctx) -> bool`` predicate
 over the site's context dict, then the occurrence window (``after`` skipped
@@ -53,7 +64,17 @@ import threading
 import time
 from typing import Any, Callable, Optional
 
-__all__ = ["FaultSpec", "FaultPlan", "InjectedFault"]
+__all__ = ["FaultSpec", "FaultPlan", "InjectedFault", "TornWrite"]
+
+
+def __getattr__(name: str):
+    # lazy re-export: TornWrite lives in core.durable (the layer that has
+    # to catch it), and importing it eagerly would drag the whole heavy
+    # core package into this module's deliberately light import graph
+    if name == "TornWrite":
+        from repro.core.durable import TornWrite
+        return TornWrite
+    raise AttributeError(name)
 
 
 class InjectedFault(RuntimeError):

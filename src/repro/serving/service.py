@@ -29,16 +29,38 @@ broadcast.  Workers block on the ready *queue* (not a shared condition), the
 scheduler sleeps on an event it only needs when a bucket is *opened*, and
 completion broadcasts fire per batch, not per request.
 
-Failure semantics (the degradation ladder)::
+Failure semantics (the budget-gated degradation ladder)::
 
-    stacked run_op crashes
+    per rung: error-budget gate (serving.budget)
+      ├─ closed  → the rung runs its normal ladder step below
+      ├─ open    → rung SKIPPED outright: no attempts, no retries, no
+      │            backoff sleeps (ServeStats.budget_skips) — a backend
+      │            that has been failing all minute has nothing new to say
+      └─ probe   → ONE single-attempt execution; success closes the
+                   breaker, failure re-opens it (ServeStats.budget_probes)
+
+    stacked run_op crashes (on an admitted rung)
       ├─► bounded exponential-backoff retries on the same backend/knob
+      │     (each sleep capped at the bucket's earliest request deadline)
       ├─► default-knob probe — success pins the crash on the *knob*:
       │     quarantine (backend, op, dtype, knob) in the runtime (TTL'd
       │     circuit breaker) and serve the probe's result
       ├─► next backend down degradation_chain() (pallas → cpu_blocked → ref)
       ├─► bisect the bucket: one poisoned request must not sink batchmates
-      └─► typed ExecutionFailedError on the survivors' futures
+      └─► typed ExecutionFailedError on the survivors' futures — except
+          requests whose deadline lapsed during the ladder, which fail
+          with DeadlineExpiredError (they timed out, the backend merely
+          also happened to be broken)
+
+Overload is shed at the front door (admission control, all knobs on
+``ServeConfig``): a request whose ``deadline`` cannot be met given the
+bucket's observed mean queue delay is rejected synchronously with
+``AdmissionRejectedError`` instead of being parked to die; lower priority
+classes (``submit(priority="batch"/"exploration")`` — retuner/exploration
+traffic) shed at a fraction of ``max_pending`` while user traffic still
+gets the full buffer; and past ``brownout_pending`` in-flight requests the
+workers serve cached-or-default knobs only (``runtime.peek``) — zero model
+evaluations until the backlog drains.
 
 Every submitted request therefore resolves — to a result, a
 ``DeadlineExpiredError`` (its ``submit(deadline=)`` lapsed before
@@ -63,11 +85,18 @@ from repro.core.runtime import AdsalaRuntime, global_runtime
 
 __all__ = ["BlasService", "ServeConfig", "ServeStats", "bucket_key",
            "ServiceClosedError", "DeadlineExpiredError",
-           "ExecutionFailedError"]
+           "ExecutionFailedError", "AdmissionRejectedError"]
 
 
 class ServiceClosedError(RuntimeError):
     """submit() on a closed service, or a request abandoned by close()."""
+
+
+class AdmissionRejectedError(RuntimeError):
+    """submit() shed this request at the front door: its deadline cannot be
+    met given the bucket's observed queue delay, or its priority class is
+    above its shed threshold while the service is backlogged.  Raised
+    synchronously — no future is created, nothing is enqueued."""
 
 
 class DeadlineExpiredError(TimeoutError):
@@ -81,6 +110,11 @@ class ExecutionFailedError(RuntimeError):
 
 #: ops the service accepts (import-light mirror of backends.L3_OPS)
 SERVABLE_OPS = ("gemm", "symm", "syrk", "syr2k", "trmm", "trsm")
+
+#: admission-control priority classes, in shed order: "exploration"
+#: (retuner probes, speculative traffic) sheds first, then "batch"
+#: (offline/bulk callers), and "user" traffic keeps the full buffer
+_PRIORITY_LEVELS = {"user": 0, "batch": 1, "exploration": 2}
 
 #: lazily bound repro.backends.resolve_backend (keeps the serving module's
 #: import graph light; the backends package pulls in jax)
@@ -139,6 +173,21 @@ class ServeConfig:
     backend_fallback: bool = True     # walk degradation_chain() on failure
     bisect_failures: bool = True      # split a failing multi-request bucket
     quarantine_ttl_s: float = 30.0    # knob circuit-breaker open duration
+    # -- error budgets (serving.budget: skip known-bad rungs outright) --
+    error_budget: bool = True     # gate ladder rungs on rolling failure rate
+    budget_window: int = 16       # outcomes per (backend, op) rolling window
+    budget_threshold: float = 0.5     # failure rate that exhausts the budget
+    budget_min_count: int = 4     # outcomes before a rung may be skipped
+    budget_probe_interval_s: float = 5.0  # open-breaker half-open cadence
+    # -- admission control (shed overload at submit, not in the queue) --
+    admission_control: bool = True    # deadline-aware + priority shedding
+    shed_batch_at: float = 0.9    # "batch" priority sheds at this fraction
+                                  # of max_pending (user gets the full buffer)
+    shed_explore_at: float = 0.6  # "exploration" (retuner probes) sheds first
+    brownout_pending: Optional[int] = None
+                                  # queue depth past which workers serve
+                                  # cached-or-default knobs with ZERO model
+                                  # evaluations; None disables brownout
 
     def __post_init__(self) -> None:
         if self.trace_batching not in (True, False, "auto"):
@@ -159,6 +208,20 @@ class ServeConfig:
             raise ValueError("retry_backoff_s must be >= 0")
         if self.quarantine_ttl_s <= 0:
             raise ValueError("quarantine_ttl_s must be > 0")
+        if self.budget_window < 1:
+            raise ValueError("budget_window must be >= 1")
+        if not 0.0 < self.budget_threshold <= 1.0:
+            raise ValueError("budget_threshold must be in (0, 1]")
+        if self.budget_min_count < 1:
+            raise ValueError("budget_min_count must be >= 1")
+        if self.budget_probe_interval_s <= 0:
+            raise ValueError("budget_probe_interval_s must be > 0")
+        if not 0.0 <= self.shed_batch_at <= 1.0:
+            raise ValueError("shed_batch_at must be in [0, 1]")
+        if not 0.0 <= self.shed_explore_at <= 1.0:
+            raise ValueError("shed_explore_at must be in [0, 1]")
+        if self.brownout_pending is not None and self.brownout_pending < 1:
+            raise ValueError("brownout_pending must be >= 1 or None")
 
 
 @dataclasses.dataclass
@@ -186,9 +249,22 @@ class ServeStats:
     fallback_executions: int = 0  # stacked runs completed on a degraded
                                   # backend (below the requested one)
     quarantined_knobs: int = 0    # knob circuit breakers this service opened
-    deadline_expired: int = 0     # requests dropped before execution
+    deadline_expired: int = 0     # requests dropped before execution (or
+                                  # expired during the ladder's retries)
     worker_respawns: int = 0      # dead workers detected and replaced
     warm_start_errors: int = 0    # registry load/save failures (survived)
+    # -- error budgets (per-rung state: BlasService.budget_state()) --
+    budget_skips: int = 0         # ladder rungs skipped outright (budget
+                                  # exhausted: no attempts, no sleeps)
+    budget_probes: int = 0        # half-open single-attempt probes let
+                                  # through an open breaker
+    # -- admission control --
+    shed_deadline: int = 0        # submits rejected: deadline infeasible
+                                  # given the bucket's mean queue delay
+    shed_priority: int = 0        # batch/exploration submits rejected at
+                                  # their shed fraction of max_pending
+    brownout_batches: int = 0     # buckets served cached-or-default knobs
+                                  # (zero model evals) under brownout
 
     @property
     def mean_batch(self) -> float:
@@ -291,6 +367,27 @@ class BlasService:
         #: optional repro.serving.faults.FaultPlan (chaos harness); every
         #: site is behind an `is not None` check — disabled costs nothing
         self._faults = faults
+        # error budgets: attach the ledger BEFORE the warm start so
+        # persisted {"budget": 1} records land in it (a rung that was
+        # burning its budget when the last process died stays skipped)
+        self.budgets = None
+        if self.config.error_budget:
+            from repro.serving.budget import BudgetConfig, ErrorBudgetLedger
+            existing = self.runtime.attached_budgets()
+            if existing is not None:
+                self.budgets = existing     # shared runtime: shared budgets
+            else:
+                self.budgets = ErrorBudgetLedger(BudgetConfig(
+                    window=self.config.budget_window,
+                    threshold=self.config.budget_threshold,
+                    min_count=self.config.budget_min_count,
+                    probe_interval_s=self.config.budget_probe_interval_s))
+                self.runtime.attach_budgets(self.budgets)
+        # crash-safe incremental persistence: every NEW cached decision and
+        # quarantine is journaled beside the snapshot, so a SIGKILL between
+        # save_decision_cache calls loses nothing
+        if registry is not None and self.runtime.decision_journal is None:
+            self.runtime.decision_journal = registry.journal_decision
         self.warm_started = 0
         if registry is not None:
             # a corrupt or missing persisted cache must not stop the server
@@ -357,7 +454,8 @@ class BlasService:
     # -- submission -----------------------------------------------------------
     def submit(self, op: str, operands: tuple, *,
                backend: Optional[str] = None,
-               deadline: Optional[float] = None, **kw) -> Future:
+               deadline: Optional[float] = None,
+               priority: str = "user", **kw) -> Future:
         """Enqueue one BLAS call; returns a Future resolving to its result.
 
         Blocks (backpressure) while ``max_pending`` requests are in flight.
@@ -365,11 +463,25 @@ class BlasService:
         still waiting in a bucket when its deadline lapses is dropped before
         execution and its future fails with :class:`DeadlineExpiredError`.
         Raises :class:`ServiceClosedError` after :meth:`close`.
+
+        Admission control (``ServeConfig.admission_control``) sheds
+        overload *synchronously* with :class:`AdmissionRejectedError`
+        instead of parking doomed work: a deadlined request whose bucket's
+        observed mean queue delay already exceeds the deadline is rejected
+        up front, and non-``"user"`` priority classes (``"batch"``, then
+        ``"exploration"`` first — retuner probes and other speculative
+        traffic) are rejected once the in-flight count crosses their shed
+        fraction of ``max_pending``, keeping the tail of the buffer for
+        user traffic.
         """
         if op not in SERVABLE_OPS:
             raise ValueError(f"unknown op {op!r}; servable: {SERVABLE_OPS}")
         if deadline is not None and deadline <= 0:
             raise ValueError("deadline must be > 0 seconds from now")
+        level = _PRIORITY_LEVELS.get(priority)
+        if level is None:
+            raise ValueError(f"unknown priority {priority!r}; one of "
+                             f"{tuple(_PRIORITY_LEVELS)}")
         operands = tuple(np.asarray(x) for x in operands)
         if any(x.ndim != 2 for x in operands):
             raise ValueError("submit takes one 2-D problem per request; "
@@ -378,6 +490,21 @@ class BlasService:
         key = bucket_key(op, [x.shape for x in operands],
                          [x.dtype for x in operands], be,
                          tuple(sorted(kw.items())))
+        cfg = self.config
+        if cfg.admission_control and deadline is not None:
+            # deadline feasibility against the bucket's OBSERVED queue
+            # delay (lock-free peek; keyed by the requested backend — the
+            # same key this request will bucket under).  No history means
+            # no evidence of infeasibility: admit.
+            bstats = self.runtime.bucket_stats_peek(key[:4])
+            if bstats is not None and bstats.requests:
+                est = bstats.mean_queue
+                if est > deadline:
+                    with self._mutex:
+                        self.stats.shed_deadline += 1
+                    raise AdmissionRejectedError(
+                        f"deadline {deadline:.4f}s infeasible: bucket "
+                        f"{key[:4]} mean queue delay is {est:.4f}s")
         now = time.monotonic()
         req = _Request(op=op, operands=operands, kw=kw, future=Future(),
                        t_submit=now,
@@ -385,6 +512,14 @@ class BlasService:
         with self._mutex:
             if self._closed:
                 raise ServiceClosedError("service is closed")
+            if level and cfg.admission_control:
+                frac = cfg.shed_batch_at if level == 1 \
+                    else cfg.shed_explore_at
+                if self._pending >= frac * cfg.max_pending:
+                    self.stats.shed_priority += 1
+                    raise AdmissionRejectedError(
+                        f"{priority!r} traffic sheds at {frac:.0%} of "
+                        f"max_pending ({self._pending} in flight)")
             while self._pending >= self.config.max_pending:
                 self._done.wait(0.05)
                 if self._closed:
@@ -696,20 +831,66 @@ class BlasService:
         if live:
             self._execute_chain(bucket, live)
 
-    def _execute_chain(self, bucket: _Bucket, reqs: list) -> None:
-        """The degradation ladder for one stack of requests: per backend
-        rung — bounded-backoff retries with the selected knob, then a
-        default-knob probe whose success quarantines the selected knob —
-        then the next rung of ``degradation_chain()``; an exhausted chain
-        bisects multi-request buckets (one poisoned request must not sink
-        its batchmates) and finally fails futures with a typed error."""
+    def budget_state(self) -> dict:
+        """Per-(backend, op) error-budget rung state (breaker state,
+        rolling failure rate, skip/probe counters); empty when budgets are
+        disabled."""
+        return self.budgets.snapshot() if self.budgets is not None else {}
+
+    def _execute_chain(self, bucket: _Bucket, reqs: list,
+                       bisected: bool = False) -> None:
+        """The budget-gated degradation ladder for one stack of requests:
+        per backend rung — error-budget gate first (an over-budget rung is
+        skipped outright, a due breaker gets one single-attempt probe) —
+        then bounded-backoff retries with the selected knob (each sleep
+        capped at the bucket's earliest deadline), then a default-knob
+        probe whose success quarantines the selected knob — then the next
+        rung of ``degradation_chain()``; an exhausted chain bisects
+        multi-request buckets (one poisoned request must not sink its
+        batchmates) and finally fails futures with a typed error
+        (``DeadlineExpiredError`` for requests that timed out along the
+        way, ``ExecutionFailedError`` for the rest)."""
         backend, op, dtype_bytes, dims = bucket.key[:4]
         cfg = self.config
+        ledger = self.budgets
         chain = self._degrade_chain(backend) if cfg.backend_fallback \
             else (backend,)
         resolver = _backend_resolver()
         last_exc: Exception | None = None
+        # the earliest live deadline bounds every backoff sleep: a bucket
+        # must never sleep through its own deadline and then report the
+        # backend failure instead of the timeout
+        min_deadline = min((r.deadline for r in reqs
+                            if r.deadline is not None), default=None)
+        # brownout: past the configured backlog, serve cached-or-default
+        # knobs only — model evaluations are pure queue-delay under
+        # overload, and the cache keeps previously seen shapes optimal
+        brownout = (cfg.brownout_pending is not None
+                    and self._pending >= cfg.brownout_pending)
         for be_name in chain:
+            mode = "closed"
+            # bisected halves bypass the gate: they are the diagnostic
+            # subdivision of a rung that was ALREADY admitted — skipping
+            # them would let the stack's own failures starve the very
+            # isolation step that exonerates its healthy batchmates.
+            # (Their outcomes still feed the window, so a genuinely dead
+            # rung opens the breaker for the NEXT bucket's top level.)
+            if ledger is not None and not bisected:
+                mode = ledger.admit(be_name, op)
+                if mode == "skip":
+                    # budget exhausted: the rung has been failing all
+                    # window — skip it outright (no attempts, no retries,
+                    # no backoff sleeps) and let the ladder move on
+                    with self._mutex:
+                        self.stats.budget_skips += 1
+                    if last_exc is None:
+                        last_exc = ExecutionFailedError(
+                            f"rung {be_name!r} skipped: error budget "
+                            f"exhausted")
+                    continue
+                if mode == "probe":
+                    with self._mutex:
+                        self.stats.budget_probes += 1
             try:
                 be = resolver(be_name)
             except Exception as e:       # noqa: BLE001 — rung unregistered
@@ -725,21 +906,41 @@ class BlasService:
                 continue
             # ONE knob decision for the whole stack, under the executed
             # backend's cache key (exactly what run_op would have selected)
-            knob = self.runtime.select_or_default(
-                op, dims, dtype_bytes, default, backend=be_name)
+            if brownout:
+                knob = self.runtime.peek(op, dims, dtype_bytes,
+                                         backend=be_name)
+                if knob is None:
+                    knob = default
+                with self._mutex:
+                    self.stats.brownout_batches += 1
+            else:
+                knob = self.runtime.select_or_default(
+                    op, dims, dtype_bytes, default, backend=be_name)
             degraded = be_name != backend
-            for attempt in range(cfg.exec_retries + 1):
+            # a half-open probe gets exactly ONE attempt: the breaker is
+            # asking "is it healed", not paying the full retry schedule
+            attempts = 1 if mode == "probe" else cfg.exec_retries + 1
+            for attempt in range(attempts):
                 if attempt:
                     with self._mutex:
                         self.stats.retries += 1
-                    time.sleep(cfg.retry_backoff_s * (1 << (attempt - 1)))
+                    sleep_s = cfg.retry_backoff_s * (1 << (attempt - 1))
+                    if min_deadline is not None:
+                        sleep_s = min(sleep_s,
+                                      min_deadline - time.monotonic())
+                    if sleep_s > 0:
+                        time.sleep(sleep_s)
                 try:
                     self._run_and_resolve(bucket, reqs, be_name, knob,
                                           attempt, degraded)
+                    if ledger is not None:
+                        ledger.record(be_name, op, True)
                     return
                 except Exception as e:   # noqa: BLE001 — next attempt/rung
                     last_exc = e
-            if knob != default:
+                    if ledger is not None:
+                        ledger.record(be_name, op, False)
+            if knob != default and mode != "probe":
                 # knob-specific-failure probe: the model's pick crashed
                 # every attempt — if the backend's own default config runs
                 # clean, the crash is pinned on the KNOB, so quarantine it
@@ -750,7 +951,11 @@ class BlasService:
                                           cfg.exec_retries + 1, degraded)
                 except Exception as e:   # noqa: BLE001 — backend-wide after
                     last_exc = e         # all: fall through to the next rung
+                    if ledger is not None:
+                        ledger.record(be_name, op, False)
                 else:
+                    if ledger is not None:
+                        ledger.record(be_name, op, True)
                     self.runtime.quarantine_knob(
                         op, dtype_bytes, be_name, knob, fallback=default,
                         ttl_s=cfg.quarantine_ttl_s)
@@ -762,19 +967,33 @@ class BlasService:
             # request (bad operand values, shape edge case) may be taking
             # its batchmates down with it: split and retry each half
             mid = (len(reqs) + 1) // 2
-            self._execute_chain(bucket, reqs[:mid])
-            self._execute_chain(bucket, reqs[mid:])
+            self._execute_chain(bucket, reqs[:mid], bisected=True)
+            self._execute_chain(bucket, reqs[mid:], bisected=True)
             return
+        # requests whose deadline lapsed during the ladder report the
+        # timeout, not the backend failure they never got to outlive
+        now = time.monotonic()
+        live, timed_out = [], []
+        for r in reqs:
+            (timed_out if r.deadline is not None and now >= r.deadline
+             else live).append(r)
+        n_exp = 0
+        if timed_out:
+            dexc = DeadlineExpiredError(
+                "request deadline expired during the degradation ladder")
+            dexc.__cause__ = last_exc
+            n_exp = sum(_resolve_exc(r.future, dexc) for r in timed_out)
         exc = ExecutionFailedError(
             f"{op} bucket dims={dims} failed on every backend in {chain}")
         exc.__cause__ = last_exc
-        n = sum(_resolve_exc(r.future, exc) for r in reqs)
+        n = sum(_resolve_exc(r.future, exc) for r in live)
         # futures resolve BEFORE the pending count drops: drain()/close()
         # promise that no request is in flight once they return
         with self._mutex:
             self.stats.failed += n
+            self.stats.deadline_expired += n_exp
             self.stats.batches += 1
-            self._pending -= n
+            self._pending -= n + n_exp
             self._done.notify_all()
 
     @staticmethod

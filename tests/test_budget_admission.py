@@ -1,0 +1,395 @@
+"""Error-budget ledger (``repro.serving.budget``) and admission control:
+breaker state machine with injectable time, ladder-level rung skipping and
+half-open probes, budget persistence through export/import, priority and
+deadline shedding at submit, brownout's zero-eval serving, and
+deadline-bounded retry backoff."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.backends import get_backend
+from repro.core import AdsalaRuntime
+from repro.core.knobs import Knob
+from repro.serving import (AdmissionRejectedError, BlasService, BudgetConfig,
+                           DeadlineExpiredError, ErrorBudgetLedger,
+                           FaultPlan, FaultSpec, ServeConfig)
+
+
+class StubSub:
+    def __init__(self, backend: str = "ref", op: str = "gemm",
+                 dtype_bytes: int = 4, knob=None) -> None:
+        self.backend, self.op, self.dtype_bytes = backend, op, dtype_bytes
+        self.knob = knob if knob is not None \
+            else get_backend(backend).default_knob(op)
+        self.artifact_version = 0
+        self.evals = 0
+
+    def select(self, dims):
+        self.evals += 1
+        return self.knob
+
+
+def make(op, dims, seed=0):
+    return get_backend("ref").make_operands(op, dims, np.float32, seed=seed)
+
+
+CFG = BudgetConfig(window=8, threshold=0.5, min_count=3,
+                   probe_interval_s=10.0)
+
+
+# ---------------------------------------------------------------------------
+# ledger state machine (injectable now: no sleeps, fully deterministic)
+# ---------------------------------------------------------------------------
+
+def test_budget_config_validation():
+    with pytest.raises(ValueError, match="window"):
+        BudgetConfig(window=0)
+    with pytest.raises(ValueError, match="threshold"):
+        BudgetConfig(threshold=1.5)
+    with pytest.raises(ValueError, match="min_count"):
+        BudgetConfig(min_count=0)
+    with pytest.raises(ValueError, match="probe_interval_s"):
+        BudgetConfig(probe_interval_s=0.0)
+
+
+def test_ledger_unknown_rung_is_innocent():
+    led = ErrorBudgetLedger(CFG)
+    assert led.admit("pallas", "gemm", now=0.0) == "closed"
+    assert led.snapshot() == {}
+
+
+def test_ledger_opens_after_min_count_failures():
+    led = ErrorBudgetLedger(CFG)
+    led.record("b", "gemm", False, now=0.0)
+    led.record("b", "gemm", False, now=0.0)
+    # two failures < min_count: still within budget
+    assert led.admit("b", "gemm", now=0.0) == "closed"
+    led.record("b", "gemm", False, now=0.0)
+    assert led.admit("b", "gemm", now=1.0) == "skip"      # opens here
+    assert led.admit("b", "gemm", now=2.0) == "skip"      # stays open
+    snap = led.snapshot()[("b", "gemm")]
+    assert snap["state"] == "open" and snap["opens"] == 1
+    assert snap["skips"] == 2 and snap["failure_rate"] == 1.0
+
+
+def test_ledger_mixed_outcomes_below_threshold_stay_closed():
+    led = ErrorBudgetLedger(CFG)
+    for ok in (True, False, True, False, True, True):     # rate 1/3
+        led.record("b", "gemm", ok, now=0.0)
+    assert led.admit("b", "gemm", now=1.0) == "closed"
+
+
+def test_ledger_probe_success_closes_and_forgives():
+    led = ErrorBudgetLedger(CFG)
+    for _ in range(3):
+        led.record("b", "gemm", False, now=0.0)
+    assert led.admit("b", "gemm", now=0.0) == "skip"
+    # before the interval: still skipped; at the interval: one probe
+    assert led.admit("b", "gemm", now=9.9) == "skip"
+    assert led.admit("b", "gemm", now=10.0) == "probe"
+    # probe outstanding: concurrent buckets are still skipped
+    assert led.admit("b", "gemm", now=10.1) == "skip"
+    led.record("b", "gemm", True, now=10.2)
+    assert led.admit("b", "gemm", now=10.3) == "closed"
+    # the window was forgiven: old failures don't instantly re-open
+    snap = led.snapshot()[("b", "gemm")]
+    assert snap["state"] == "closed" and snap["failure_rate"] == 0.0
+
+
+def test_ledger_probe_failure_reopens():
+    led = ErrorBudgetLedger(CFG)
+    for _ in range(3):
+        led.record("b", "gemm", False, now=0.0)
+    assert led.admit("b", "gemm", now=0.0) == "skip"
+    assert led.admit("b", "gemm", now=10.0) == "probe"
+    led.record("b", "gemm", False, now=10.1)
+    assert led.admit("b", "gemm", now=15.0) == "skip"      # re-opened
+    assert led.admit("b", "gemm", now=20.1) == "probe"     # next interval
+
+
+def test_ledger_reclaims_abandoned_probe():
+    """A probe whose owner died without recording must not wedge the rung
+    half-open forever — after a full interval the probe is re-issued."""
+    led = ErrorBudgetLedger(CFG)
+    for _ in range(3):
+        led.record("b", "gemm", False, now=0.0)
+    assert led.admit("b", "gemm", now=0.0) == "skip"
+    assert led.admit("b", "gemm", now=10.0) == "probe"     # owner dies here
+    assert led.admit("b", "gemm", now=15.0) == "skip"
+    assert led.admit("b", "gemm", now=20.0) == "probe"     # reclaimed
+
+
+def test_ledger_export_import_rebases_probe_clock():
+    led = ErrorBudgetLedger(CFG)
+    for _ in range(3):
+        led.record("b", "gemm", False, now=0.0)
+    assert led.admit("b", "gemm", now=0.0) == "skip"
+    recs = led.export(now=4.0)          # 6s of the 10s interval remain
+    assert recs == [{"budget": 1, "backend": "b", "op": "gemm",
+                     "outcomes": [0, 0, 0], "state": "open",
+                     "probe_in_s": 6.0}]
+    # the restored breaker's probe comes due probe_in_s from the NEW now —
+    # the dead process's monotonic clock never leaks across the restart
+    led2 = ErrorBudgetLedger(CFG)
+    assert led2.import_records(recs, now=1000.0) == 1
+    assert led2.admit("b", "gemm", now=1005.9) == "skip"
+    assert led2.admit("b", "gemm", now=1006.0) == "probe"
+
+
+def test_ledger_import_tolerates_garbage():
+    led = ErrorBudgetLedger(CFG)
+    recs = [{"budget": 1},                        # missing fields
+            {"budget": 1, "backend": "b", "op": "gemm",
+             "outcomes": "xx", "state": "open"},  # bad outcomes
+            {"budget": 1, "backend": "b", "op": "gemm",
+             "outcomes": [1], "state": "weird"},  # unknown state
+            {"not-budget": 1},
+            {"budget": 1, "backend": "c", "op": "gemm",
+             "outcomes": [0, 0, 0], "state": "closed"}]
+    assert led.import_records(recs, now=0.0) == 1
+    assert ("c", "gemm") in led.snapshot()
+
+
+def test_half_open_exports_as_probe_due_now():
+    led = ErrorBudgetLedger(CFG)
+    for _ in range(3):
+        led.record("b", "gemm", False, now=0.0)
+    assert led.admit("b", "gemm", now=0.0) == "skip"
+    assert led.admit("b", "gemm", now=10.0) == "probe"     # now half-open
+    (rec,) = led.export(now=10.1)
+    assert rec["state"] == "open" and rec["probe_in_s"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# the ladder honours the ledger
+# ---------------------------------------------------------------------------
+
+def _dead_rung_cfg(**kw):
+    base = dict(backend="cpu_blocked", max_batch=1, linger_ms=0.5, workers=1,
+                min_steal=1, exec_retries=1, retry_backoff_s=0.0,
+                budget_window=8, budget_threshold=0.4, budget_min_count=2,
+                budget_probe_interval_s=60.0)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def _dead_rung_plan(times=None):
+    return FaultPlan([FaultSpec(site="kernel_execute", times=times,
+                                match=lambda c:
+                                c["backend"] == "cpu_blocked")])
+
+
+def test_ladder_skips_over_budget_rung():
+    plan = _dead_rung_plan()
+    rt = AdsalaRuntime(faults=plan)
+    with BlasService(runtime=rt, config=_dead_rung_cfg(),
+                     faults=plan) as svc:
+        svc.call("gemm", make("gemm", (16, 16, 16)))      # warmup: 2 attempts
+        fired = plan.fired("kernel_execute")
+        assert fired == 2
+        for i in range(3):                                 # all skipped
+            svc.call("gemm", make("gemm", (16, 16, 16), seed=i + 1))
+        assert plan.fired("kernel_execute") == fired       # ZERO new attempts
+        assert svc.stats.budget_skips == 3
+        assert svc.stats.failed == 0                       # ref still serves
+        state = svc.budget_state()[("cpu_blocked", "gemm")]
+        assert state["state"] == "open"
+
+
+def test_ladder_keeps_retrying_with_budgets_disabled():
+    plan = _dead_rung_plan()
+    rt = AdsalaRuntime(faults=plan)
+    with BlasService(runtime=rt, config=_dead_rung_cfg(error_budget=False),
+                     faults=plan) as svc:
+        for i in range(3):
+            svc.call("gemm", make("gemm", (16, 16, 16), seed=i))
+        assert plan.fired("kernel_execute") == 6           # 2 per bucket
+        assert svc.stats.budget_skips == 0
+        assert svc.budget_state() == {}
+
+
+def test_ladder_probe_closes_healed_rung():
+    plan = _dead_rung_plan(times=2)     # fault dies with the warmup bucket
+    rt = AdsalaRuntime(faults=plan)
+    cfg = _dead_rung_cfg(budget_probe_interval_s=0.2)
+    with BlasService(runtime=rt, config=cfg, faults=plan) as svc:
+        svc.call("gemm", make("gemm", (16, 16, 16)))       # opens the breaker
+        svc.call("gemm", make("gemm", (16, 16, 16), seed=1))   # skipped
+        assert svc.stats.budget_skips >= 1
+        fallbacks = svc.stats.fallback_executions
+        time.sleep(0.25)
+        svc.call("gemm", make("gemm", (16, 16, 16), seed=2))   # the probe
+        assert svc.stats.budget_probes == 1
+        # served on the primary rung again — no new fallback execution
+        assert svc.stats.fallback_executions == fallbacks
+        assert svc.budget_state()[("cpu_blocked", "gemm")]["state"] \
+            == "closed"
+
+
+def test_budget_state_survives_export_import():
+    """A rung that exhausted its budget stays skipped across a warm
+    restart: the ledger's records ride export_cache/import_cache."""
+    plan = _dead_rung_plan()
+    rt = AdsalaRuntime(faults=plan)
+    with BlasService(runtime=rt, config=_dead_rung_cfg(),
+                     faults=plan) as svc:
+        svc.call("gemm", make("gemm", (16, 16, 16)))
+        svc.call("gemm", make("gemm", (16, 16, 16), seed=1))
+        assert svc.budget_state()[("cpu_blocked", "gemm")]["state"] == "open"
+        exported = rt.export_cache()
+    assert any(e.get("budget") for e in exported)
+
+    # records imported BEFORE any service exists are parked, then drained
+    # into the ledger the next service attaches
+    rt2 = AdsalaRuntime()
+    rt2.import_cache(exported)
+    plan2 = _dead_rung_plan()
+    with BlasService(runtime=rt2, config=_dead_rung_cfg(),
+                     faults=plan2) as svc2:
+        assert svc2.budget_state()[("cpu_blocked", "gemm")]["state"] \
+            == "open"
+        svc2.call("gemm", make("gemm", (16, 16, 16)))
+        assert plan2.fired("kernel_execute") == 0          # still skipped
+        assert svc2.stats.budget_skips == 1
+
+
+def test_serve_config_budget_validation():
+    with pytest.raises(ValueError, match="budget_window"):
+        ServeConfig(budget_window=0)
+    with pytest.raises(ValueError, match="budget_threshold"):
+        ServeConfig(budget_threshold=0.0)
+    with pytest.raises(ValueError, match="budget_min_count"):
+        ServeConfig(budget_min_count=0)
+    with pytest.raises(ValueError, match="budget_probe_interval_s"):
+        ServeConfig(budget_probe_interval_s=-1.0)
+    with pytest.raises(ValueError, match="shed_batch_at"):
+        ServeConfig(shed_batch_at=1.5)
+    with pytest.raises(ValueError, match="shed_explore_at"):
+        ServeConfig(shed_explore_at=-0.1)
+    with pytest.raises(ValueError, match="brownout_pending"):
+        ServeConfig(brownout_pending=0)
+
+
+# ---------------------------------------------------------------------------
+# admission control: shed at submit, not in the queue
+# ---------------------------------------------------------------------------
+
+def test_priority_sheds_before_user_traffic():
+    # one worker held by an injected latency while user traffic fills the
+    # buffer past both shed thresholds (2 and 4 of max_pending=8)
+    plan = FaultPlan([FaultSpec(site="stacked_execute", exc=None,
+                                latency_s=0.25, times=None)])
+    cfg = ServeConfig(backend="ref", max_batch=1, linger_ms=0.5, workers=1,
+                      min_steal=1, max_pending=8, shed_explore_at=0.25,
+                      shed_batch_at=0.5)
+    with BlasService(runtime=AdsalaRuntime(), config=cfg,
+                     faults=plan) as svc:
+        futs = [svc.submit("gemm", make("gemm", (16, 16, 16), seed=i))
+                for i in range(4)]
+        with pytest.raises(AdmissionRejectedError, match="exploration"):
+            svc.submit("gemm", make("gemm", (16, 16, 16)),
+                       priority="exploration")
+        with pytest.raises(AdmissionRejectedError, match="batch"):
+            svc.submit("gemm", make("gemm", (16, 16, 16)), priority="batch")
+        # user traffic is still admitted at the same depth
+        futs.append(svc.submit("gemm", make("gemm", (16, 16, 16), seed=9)))
+        for f in futs:
+            f.result(timeout=120)
+        assert svc.stats.shed_priority == 2
+        assert svc.stats.failed == 0
+
+
+def test_unknown_priority_rejected():
+    cfg = ServeConfig(backend="ref", workers=1)
+    with BlasService(runtime=AdsalaRuntime(), config=cfg) as svc:
+        with pytest.raises(ValueError, match="priority"):
+            svc.submit("gemm", make("gemm", (16, 16, 16)), priority="vip")
+
+
+def test_deadline_infeasible_request_shed_at_submit():
+    rt = AdsalaRuntime()
+    # the bucket's observed mean queue delay says 0.5s
+    rt.record_batch("gemm", (16, 16, 16), 4, "ref", 1,
+                    queue_seconds=0.5, exec_items=1)
+    cfg = ServeConfig(backend="ref", max_batch=1, linger_ms=0.5, workers=1,
+                      min_steal=1)
+    with BlasService(runtime=rt, config=cfg) as svc:
+        with pytest.raises(AdmissionRejectedError, match="infeasible"):
+            svc.submit("gemm", make("gemm", (16, 16, 16)), deadline=0.05)
+        assert svc.stats.shed_deadline == 1
+        # a feasible deadline on the same bucket is admitted and served
+        out = svc.submit("gemm", make("gemm", (16, 16, 16)),
+                         deadline=30.0).result(timeout=120)
+        assert out is not None
+        # shapes with NO history are never shed (no evidence: admit)
+        svc.submit("gemm", make("gemm", (32, 32, 32)),
+                   deadline=0.05).result(timeout=120)
+
+
+def test_admission_control_off_admits_everything():
+    rt = AdsalaRuntime()
+    rt.record_batch("gemm", (16, 16, 16), 4, "ref", 1,
+                    queue_seconds=0.5, exec_items=1)
+    cfg = ServeConfig(backend="ref", max_batch=1, linger_ms=0.5, workers=1,
+                      min_steal=1, admission_control=False)
+    with BlasService(runtime=rt, config=cfg) as svc:
+        # would be shed with admission control on; now merely deadlined
+        f = svc.submit("gemm", make("gemm", (16, 16, 16)), deadline=10.0)
+        f.result(timeout=120)
+        assert svc.stats.shed_deadline == 0
+
+
+def test_brownout_serves_without_model_evals():
+    rt = AdsalaRuntime()
+    sub = StubSub("ref")
+    rt.register(sub)
+    cfg = ServeConfig(backend="ref", max_batch=1, linger_ms=0.5, workers=1,
+                      min_steal=1, brownout_pending=1)
+    reqs = [make("gemm", (16, 16, 16), seed=i) for i in range(4)]
+    with BlasService(runtime=rt, config=cfg) as svc:
+        futs = [svc.submit("gemm", r) for r in reqs]
+        outs = [np.asarray(f.result(timeout=120), np.float64) for f in futs]
+        assert svc.stats.brownout_batches >= 1
+        assert svc.stats.failed == 0
+    assert sub.evals == 0 and rt.stats.model_evals == 0
+    for r, out in zip(reqs, outs):
+        ref = np.asarray(r[0] @ r[1], np.float64)
+        assert np.max(np.abs(out - ref)) / (np.max(np.abs(ref)) + 1e-9) \
+            < 5e-4
+    # control: the same workload without brownout evaluates the model once
+    rt2 = AdsalaRuntime()
+    sub2 = StubSub("ref")
+    rt2.register(sub2)
+    with BlasService(runtime=rt2, config=ServeConfig(
+            backend="ref", max_batch=1, linger_ms=0.5, workers=1,
+            min_steal=1)) as svc2:
+        for r in reqs:
+            svc2.call("gemm", r)
+    assert sub2.evals == 1
+
+
+# ---------------------------------------------------------------------------
+# deadline-bounded backoff: fail with the truth, don't sleep through it
+# ---------------------------------------------------------------------------
+
+def test_backoff_bounded_by_request_deadline():
+    """With every rung dead and a 3s retry schedule, a 0.3s-deadline
+    request must fail DeadlineExpiredError promptly — not sleep through
+    the whole backoff and then report ExecutionFailedError."""
+    plan = FaultPlan([FaultSpec(site="kernel_execute", times=None)])
+    rt = AdsalaRuntime(faults=plan)
+    cfg = ServeConfig(backend="cpu_blocked", max_batch=1, linger_ms=0.5,
+                      workers=1, min_steal=1, exec_retries=2,
+                      retry_backoff_s=1.0, error_budget=False)
+    with BlasService(runtime=rt, config=cfg, faults=plan) as svc:
+        t0 = time.perf_counter()
+        fut = svc.submit("gemm", make("gemm", (16, 16, 16)), deadline=0.3)
+        with pytest.raises(DeadlineExpiredError, match="ladder"):
+            fut.result(timeout=120)
+        elapsed = time.perf_counter() - t0
+    # the un-bounded schedule would sleep 1s + 2s per rung; the bound caps
+    # the total at roughly the deadline itself
+    assert elapsed < 1.5
+    assert svc.stats.deadline_expired >= 1

@@ -207,8 +207,15 @@ def test_decision_cache_persists_via_registry(tmp_path):
     rt.select("gemm", (64, 64, 64), 4, backend="b0")
     path = reg.save_decision_cache(rt)
     assert path == tmp_path / ModelRegistry.DECISION_CACHE
-    payload = json.loads(path.read_text())
-    assert payload["version"] == 2 and len(payload["entries"]) == 1
+    # durable checksummed snapshot: magic header, a version-3 header
+    # record, one record per cache entry — every record self-verifies
+    from repro.core.durable import MAGIC, read_records
+    assert path.read_text().startswith(MAGIC)
+    records, dropped = read_records(path)
+    assert dropped == 0
+    assert records[0] == {"header": 1,
+                          "version": ModelRegistry.DECISION_CACHE_VERSION}
+    assert len(records) == 2 and records[1]["op"] == "gemm"
 
     warm = AdsalaRuntime()
     warm.register(StubSub("b0"))
