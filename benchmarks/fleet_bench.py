@@ -1,0 +1,327 @@
+#!/usr/bin/env python
+"""Fleet harness: sharded multi-process serving vs the in-process service.
+
+Two scenarios, both on the same Zipf-distributed GEMM-family traffic the
+serving benches use:
+
+  throughput  the same open-loop workload is driven through (a) a
+              single-process :class:`~repro.serving.BlasService` and (b) an
+              N-process :class:`~repro.serving.FleetService` — identical
+              front-end, but each flushed bucket executes in its own OS
+              process with its own runtime, so the stacked kernels escape
+              the GIL.  Reports the fleet/single throughput ratio (the
+              ISSUE-10 claim: >= 1.5x with 2 processes on a multi-core
+              host; advisory below --low-core-threshold cores, where there
+              is no parallelism to win);
+  warm-join   the shared-journal coherence claim, structurally: member 1
+              decides a shape set against a real installed model (each
+              miss-path decision journaled), ``add_member()`` hydrates a
+              second executor from the shared journal, the same shapes are
+              re-served, and the newcomer must have performed ZERO model
+              evaluations (``warm_join_zero_evals``).  Also checks the
+              fingerprint resolver picked the exact arch slug and the
+              membership roster saw both executors.
+
+Structural flags are exact-gated by ``scripts/bench_diff.py --fleet-fresh``;
+the throughput ratio is tolerance-gated (warn-only on low-core hosts, like
+the serving speedup gate).
+
+    PYTHONPATH=src python benchmarks/fleet_bench.py --smoke
+    PYTHONPATH=src python benchmarks/fleet_bench.py --processes 2 \
+        --requests 600 --json /tmp/fleet.json
+    PYTHONPATH=src python benchmarks/fleet_bench.py --record pr10
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np  # noqa: E402
+
+from serve_bench import _drive, build_traffic, percentiles  # noqa: E402
+
+from repro.core import AdsalaRuntime, ModelRegistry, install_backend  # noqa: E402
+from repro.distributed import FleetMembership  # noqa: E402
+from repro.serving import (BlasService, FleetConfig, FleetService,  # noqa: E402
+                           ServeConfig)
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_fleet.json"
+
+
+# ---------------------------------------------------------------------------
+# scenario 1: throughput — fleet vs in-process service
+# ---------------------------------------------------------------------------
+
+def _warm_service(svc, traffic) -> None:
+    """One request per distinct shape: JIT/import cost (the fleet's children
+    pay the kernel-stack import on their first exec) stays out of the
+    measured window for both modes."""
+    done = set()
+    futs = []
+    for op, dims, operands in traffic:
+        if (op, dims) not in done:
+            done.add((op, dims))
+            futs.append(svc.submit(op, operands))
+    for f in futs:
+        f.result(timeout=300)
+
+
+def _measure(svc, traffic, args) -> dict:
+    futs = []
+
+    def submit_one(i, op, operands, done_at):
+        f = svc.submit(op, operands)
+        f.add_done_callback(
+            lambda _f, i=i: done_at.__setitem__(i, time.perf_counter()))
+        futs.append(f)
+
+    def wait_all():
+        for f in futs:
+            f.result(timeout=600)
+
+    wall, lat = _drive(traffic, args, submit_one, wait_all)
+    p50, p99 = percentiles(lat)
+    return {"wall_s": wall, "throughput_rps": len(traffic) / wall,
+            "p50_ms": p50 * 1e3, "p99_ms": p99 * 1e3}
+
+
+def _median_rows(svc, traffic, args) -> dict:
+    rows = [_measure(svc, traffic, args) for _ in range(max(1, args.repeats))]
+    rows.sort(key=lambda r: r["throughput_rps"])
+    return rows[len(rows) // 2]
+
+
+def scenario_throughput(args) -> tuple[dict, dict]:
+    traffic = build_traffic(args.op, args)
+    print(f"[fleet_bench] {len(traffic)} {args.op} requests over "
+          f"{args.shapes} Zipf(a={args.zipf_a}) shapes, backend="
+          f"{args.backend}, {args.processes} executor processes")
+    scfg = ServeConfig(backend=args.backend, max_batch=args.max_batch,
+                       linger_ms=args.linger_ms, workers=1,
+                       max_pending=args.max_pending)
+
+    with BlasService(runtime=AdsalaRuntime(), config=scfg) as svc:
+        _warm_service(svc, traffic)
+        single = _median_rows(svc, traffic, args)
+    single["mode"] = "single-process"
+
+    svc = FleetService(fleet=FleetConfig(processes=args.processes),
+                       config=scfg)
+    try:
+        _warm_service(svc, traffic)
+        fleet = _median_rows(svc, traffic, args)
+        fleet["batches"] = svc.stats.batches
+        fleet["mean_batch"] = svc.stats.mean_batch
+    finally:
+        svc.close()
+    fleet["mode"] = f"fleet-{args.processes}p"
+
+    for row in (single, fleet):
+        print(f"[fleet_bench] {row['mode']:>15}: "
+              f"{row['throughput_rps']:8.1f} req/s  "
+              f"p50={row['p50_ms']:7.2f} ms  p99={row['p99_ms']:7.2f} ms")
+    ratio = fleet["throughput_rps"] / max(single["throughput_rps"], 1e-9)
+    print(f"[fleet_bench] fleet/single throughput: {ratio:.2f}x "
+          f"(median of {max(1, args.repeats)})")
+    return single, fleet
+
+
+# ---------------------------------------------------------------------------
+# scenario 2: warm join — shared-journal coherence, structurally
+# ---------------------------------------------------------------------------
+
+WARM_SHAPES = ((32, 32, 32), (48, 32, 32), (64, 48, 32), (64, 64, 64))
+
+
+def scenario_warm_join(args) -> dict:
+    """Member 1 decides WARM_SHAPES against an installed model; a member
+    added afterwards hydrates from the shared journal and re-serving the
+    same shapes costs it zero model evaluations."""
+    from repro.backends import get_backend
+    rng = np.random.default_rng(args.seed + 7)
+
+    def submit_all(svc, repeat=1):
+        futs = []
+        for m, n, k in WARM_SHAPES * repeat:
+            a = rng.standard_normal((m, k)).astype(np.float32)
+            b = rng.standard_normal((k, n)).astype(np.float32)
+            futs.append(svc.submit("gemm", (a, b)))
+        for f in futs:
+            f.result(timeout=300)
+
+    with tempfile.TemporaryDirectory() as td:
+        reg = ModelRegistry(td)
+        sub_reg = reg.for_fingerprint(create=True)
+        print("[fleet_bench] warm-join: mini-installing tuned "
+              "cpu_blocked/gemm model into the arch-fingerprint registry ...")
+        install_backend(get_backend("cpu_blocked"), ops=("gemm",),
+                        n_samples=12, dim_lo=32, dim_hi=96,
+                        max_footprint_bytes=1_000_000, tune_trials=1,
+                        candidates=("LinearRegression",), registry=sub_reg,
+                        seed=args.seed)
+        svc = FleetService(
+            fleet=FleetConfig(processes=1, registry_root=td),
+            config=ServeConfig(backend="cpu_blocked", max_batch=4,
+                               linger_ms=1.0))
+        try:
+            submit_all(svc)
+            first = svc.fleet_stats()[0]
+            print(f"[fleet_bench] member 1: {first['model_evals']} model "
+                  f"evals over {len(WARM_SHAPES)} shapes, fingerprint "
+                  f"resolution={first['resolution'].get('mode')!r}")
+            info = svc.add_member()
+            print(f"[fleet_bench] member 2 joined: "
+                  f"{info.get('warm_started', 0)} decisions hydrated "
+                  f"from the shared journal")
+            submit_all(svc, repeat=4)
+            stats = svc.fleet_stats()
+            newcomer = stats[1]
+            members = FleetMembership(Path(td) / "members").members(
+                live_only=False)
+        finally:
+            svc.close()
+    print(f"[fleet_bench] member 2 after re-serve: "
+          f"{newcomer['model_evals']} model evals "
+          f"({newcomer['journal_absorbed']} journal records absorbed)")
+    return {
+        "warm_join_first_decided": bool(first["model_evals"] >= 1),
+        "warm_join_fingerprint_exact": bool(
+            first["resolution"].get("mode") == "exact"),
+        "warm_join_hydrated": bool(
+            info.get("warm_started", 0) >= len(WARM_SHAPES)),
+        "warm_join_zero_evals": bool(newcomer["model_evals"] == 0),
+        "warm_join_members_seen": len(members),
+        "warm_join_first_evals": int(first["model_evals"]),
+        "warm_join_hydrated_decisions": int(info.get("warm_started", 0)),
+    }
+
+
+STRUCTURAL = (("warm_join_first_decided", True),
+              ("warm_join_fingerprint_exact", True),
+              ("warm_join_hydrated", True),
+              ("warm_join_zero_evals", True),
+              ("warm_join_members_seen", 2))
+
+
+def check(metrics: dict) -> list[str]:
+    return [f"{k}={metrics[k]!r} (want {want!r})"
+            for k, want in STRUCTURAL if metrics[k] != want]
+
+
+def record_entry(entry_id: str, payload: dict, path: Path = BENCH_PATH):
+    from common import record_trajectory_entry    # script-mode only module
+    record_trajectory_entry(path, "fleet", entry_id, payload)
+    print(f"[fleet_bench] recorded entry {entry_id!r} -> {path}")
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--op", default="gemm", choices=(
+        "gemm", "symm", "syrk", "syr2k", "trmm", "trsm"))
+    p.add_argument("--backend", default="cpu_blocked",
+                   help="throughput-scenario backend (cpu_blocked: real "
+                        "numpy kernels, the regime where processes beat "
+                        "threads)")
+    p.add_argument("--processes", type=int, default=2)
+    p.add_argument("--requests", type=int, default=600)
+    p.add_argument("--shapes", type=int, default=6)
+    p.add_argument("--zipf-a", type=float, default=1.5)
+    p.add_argument("--rate", type=float, default=0.0,
+                   help="open-loop arrival rate req/s (0 = saturation)")
+    p.add_argument("--dim-lo", type=int, default=32)
+    p.add_argument("--dim-hi", type=int, default=96)
+    p.add_argument("--max-batch", type=int, default=16)
+    p.add_argument("--linger-ms", type=float, default=5.0)
+    p.add_argument("--max-pending", type=int, default=4096)
+    p.add_argument("--repeats", type=int, default=3)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--low-core-threshold", type=int, default=3,
+                   help="below this many cores the --min-ratio gate is "
+                        "advisory (a 1-2 core host has no process "
+                        "parallelism for the fleet to win)")
+    p.add_argument("--strict", action="store_true",
+                   help="enforce --min-ratio even on low-core hosts")
+    p.add_argument("--min-ratio", type=float, default=None,
+                   help="exit nonzero unless fleet/single throughput >= "
+                        "this (subject to the low-core guard)")
+    p.add_argument("--smoke", action="store_true",
+                   help="CI preset: tiny workload, 1 repeat")
+    p.add_argument("--json", type=Path, default=None,
+                   help="write metrics JSON here (bench_diff --fleet-fresh "
+                        "input)")
+    p.add_argument("--record", default=None, metavar="ENTRY",
+                   help="append/refresh this entry in the committed "
+                        "BENCH_fleet.json trajectory")
+    args = p.parse_args(argv)
+    if args.smoke:
+        args.requests = min(args.requests, 160)
+        args.shapes = min(args.shapes, 4)
+        args.repeats = 1
+    low_core = (os.cpu_count() or 1) < args.low_core_threshold
+
+    single, fleet = scenario_throughput(args)
+    ratio = fleet["throughput_rps"] / max(single["throughput_rps"], 1e-9)
+    metrics = scenario_warm_join(args)
+    metrics.update({
+        "fleet_ratio": round(ratio, 3),
+        "fleet_rps": round(fleet["throughput_rps"], 1),
+        "single_rps": round(single["throughput_rps"], 1),
+        "processes": args.processes,
+        "cpus": os.cpu_count(),
+        "low_core": low_core,
+    })
+    for k, v in metrics.items():
+        print(f"  {k:>28}: {v}")
+    bad = check(metrics)
+
+    if args.json is not None:
+        args.json.write_text(json.dumps(
+            {"summary": metrics, "smoke_baseline": metrics}, indent=1))
+        print(f"[fleet_bench] wrote {args.json}")
+    if args.record is not None:
+        record_entry(args.record, {
+            "host": {"platform": platform.platform(),
+                     "python": platform.python_version(),
+                     "cpus": os.cpu_count()},
+            "config": {"op": args.op, "backend": args.backend,
+                       "processes": args.processes,
+                       "requests": args.requests, "shapes": args.shapes,
+                       "zipf_a": args.zipf_a, "max_batch": args.max_batch,
+                       "linger_ms": args.linger_ms,
+                       "repeats": args.repeats},
+            "single": single, "fleet": fleet,
+            "smoke_baseline": metrics,
+        })
+
+    ok = True
+    if args.min_ratio is not None and ratio < args.min_ratio:
+        if low_core and not args.strict:
+            print(f"[fleet_bench] WARNING: fleet/single {ratio:.2f}x < "
+                  f"{args.min_ratio}x — low-core host, advisory only")
+        else:
+            print(f"[fleet_bench] FAILED: fleet/single {ratio:.2f}x < "
+                  f"{args.min_ratio}x")
+            ok = False
+    if bad:
+        print(f"[fleet_bench] FAILED: {'; '.join(bad)}")
+        return 1
+    if ok:
+        print("[fleet_bench] OK — warm join hydrated "
+              f"{metrics['warm_join_hydrated_decisions']} decisions from "
+              f"the shared journal with zero newcomer model evals; "
+              f"fleet/single throughput {ratio:.2f}x on "
+              f"{os.cpu_count()} cpu(s)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -54,6 +54,16 @@ Three trajectories:
     model evals on recovered shapes, torn journal appends and corrupt/
     garbage snapshot records are dropped with exact counts, and an open
     knob quarantine survives the crash.  All structural, compared exact.
+  * ``BENCH_fleet.json`` (gated when ``--fleet-fresh`` is given): the
+    multi-process fleet contract — a member added to a running fleet
+    hydrates from the shared decision journal and serves the already-
+    decided shapes with exactly ZERO model evaluations, the fingerprint
+    resolver picks the exact arch slug, and the membership roster sees
+    every executor (all structural, compared exact).  The fleet/single
+    throughput ratio gets the standard tolerance gate, demoted to a
+    warning on hosts below 3 cores — with no spare core there is no
+    process parallelism for the fleet to win (same guard as the serving
+    gate).
 
     PYTHONPATH=src python scripts/bench_diff.py
     PYTHONPATH=src python scripts/bench_diff.py --fresh /tmp/smoke.json \
@@ -79,6 +89,7 @@ MODEL_PATH = REPO_ROOT / "BENCH_model.json"
 RETUNE_PATH = REPO_ROOT / "BENCH_retune.json"
 CHAOS_PATH = REPO_ROOT / "BENCH_chaos.json"
 RECOVERY_PATH = REPO_ROOT / "BENCH_recovery.json"
+FLEET_PATH = REPO_ROOT / "BENCH_fleet.json"
 
 #: summary-level ratios under the standard (--tolerance) gate
 GATED_SUMMARY = ("cold_median_speedup", "batch_speedup")
@@ -103,7 +114,9 @@ _RECORDERS = {"decision": "benchmarks/decision_bench.py (full mode)",
               "chaos": "benchmarks/chaos_bench.py --smoke --record "
                        "<entry>",
               "recovery": "benchmarks/recovery_bench.py --smoke --record "
-                          "<entry>"}
+                          "<entry>",
+              "fleet": "benchmarks/fleet_bench.py --smoke --record "
+                       "<entry>"}
 
 
 def committed_baseline(path: Path) -> tuple[str, dict]:
@@ -332,6 +345,44 @@ def gate_recovery(fresh_json: Path, bench: Path, failures: list) -> None:
             failures.append(f"recovery.{key}")
 
 
+def gate_fleet(fresh_json: Path, bench: Path, tolerance: float,
+               failures: list) -> None:
+    """Multi-process fleet contract: the warm-join structural flags (exact;
+    the scenario is deterministic — a newcomer hydrated from the shared
+    journal evaluates zero models, or the coherence path broke) plus the
+    fleet/single throughput ratio under the committed-baseline tolerance
+    gate, warn-only below 3 cores (no spare core means no process
+    parallelism to win — same guard as the serving gate)."""
+    import os
+
+    import fleet_bench
+    entry_id, base = committed_baseline(bench)
+    data = json.loads(fresh_json.read_text())
+    fresh = data.get("smoke_baseline") or data["summary"]
+    for key, want in fleet_bench.STRUCTURAL:
+        got = fresh.get(key)
+        ok = got == want
+        print(f"[bench_diff] {'ok ' if ok else 'REG'} fleet.{key}: "
+              f"{got!r} (must be {want!r})")
+        if not ok:
+            failures.append(f"fleet.{key} (vs {entry_id})")
+    committed = base.get("fleet_ratio")
+    measured = fresh.get("fleet_ratio")
+    if committed is None or measured is None:
+        return
+    low_core = fresh.get("low_core")
+    if low_core is None:
+        low_core = (os.cpu_count() or 1) < 3
+    bar = committed * (1.0 - tolerance)
+    ok = measured >= bar
+    mark = "ok " if ok else ("WRN" if low_core else "REG")
+    print(f"[bench_diff] {mark} fleet.fleet_ratio: committed "
+          f"{committed:.2f}x, fresh {measured:.2f}x (floor {bar:.2f}x)"
+          f"{' — low-core host, advisory only' if low_core and not ok else ''}")
+    if not ok and not low_core:
+        failures.append(f"fleet.fleet_ratio (vs {entry_id})")
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--bench", type=Path, default=BENCH_PATH,
@@ -371,6 +422,11 @@ def main(argv=None) -> int:
                         "when given")
     p.add_argument("--recovery-bench", type=Path, default=RECOVERY_PATH,
                    help="committed crash-recovery trajectory file")
+    p.add_argument("--fleet-fresh", type=Path, default=None,
+                   help="fresh fleet metrics (fleet_bench --smoke --json "
+                        "PATH); gates BENCH_fleet.json when given")
+    p.add_argument("--fleet-bench", type=Path, default=FLEET_PATH,
+                   help="committed fleet trajectory file")
     p.add_argument("--tolerance", type=float, default=0.25,
                    help="allowed fractional regression per metric")
     args = p.parse_args(argv)
@@ -417,6 +473,9 @@ def main(argv=None) -> int:
         gate_chaos(args.chaos_fresh, args.chaos_bench, failures)
     if args.recovery_fresh is not None:
         gate_recovery(args.recovery_fresh, args.recovery_bench, failures)
+    if args.fleet_fresh is not None:
+        gate_fleet(args.fleet_fresh, args.fleet_bench,
+                   args.tolerance, failures)
 
     if failures:
         print(f"[bench_diff] FAILED vs entry {entry_id!r}: "

@@ -38,6 +38,7 @@ mid-write that recovery must shrug off.
 
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import tempfile
@@ -45,9 +46,15 @@ import threading
 import zlib
 from pathlib import Path
 
-__all__ = ["TornWrite", "DurableStore", "MAGIC", "encode_record",
-           "decode_line", "write_snapshot", "append_journal",
-           "read_records", "atomic_write_bytes", "is_durable"]
+try:  # POSIX only; on other platforms appends fall back to best-effort
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX host
+    fcntl = None
+
+__all__ = ["TornWrite", "DurableStore", "JournalFollower", "MAGIC",
+           "encode_record", "decode_line", "write_snapshot",
+           "append_journal", "read_records", "atomic_write_bytes",
+           "is_durable"]
 
 #: first line of every durable snapshot; readers use it to distinguish the
 #: checksummed format from legacy plain-JSON files
@@ -140,23 +147,45 @@ def write_snapshot(path: str | Path, records: list[dict], *,
                        faults=faults, site="snapshot_write")
 
 
+@contextlib.contextmanager
+def _exclusive(f):
+    """``fcntl.flock(LOCK_EX)`` around a file object — a no-op where flock
+    is unavailable.  O_APPEND makes each single ``write()`` atomic with
+    respect to the *offset*, but one Python-level write can still be split
+    into several kernel writes under memory pressure, and two processes
+    flushing interleaved chunks tear both records.  The lock serialises
+    whole-record appends across processes; a single writer pays one
+    uncontended syscall pair."""
+    if fcntl is None:
+        yield
+        return
+    fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+    try:
+        yield
+    finally:
+        fcntl.flock(f.fileno(), fcntl.LOCK_UN)
+
+
 def append_journal(path: str | Path, record: dict, *,
                    faults=None, fsync: bool = False) -> None:
     """Append one checksummed record to the journal.  The record is
     *prefixed* with a newline so it terminates any torn previous append;
     the write is flushed (surviving a process SIGKILL) and optionally
     fsynced (surviving power loss — off by default, the journal is an
-    incremental optimisation over the last fsynced snapshot)."""
+    incremental optimisation over the last fsynced snapshot).  The append
+    is ``flock``-guarded so concurrent writers from several processes (a
+    serving fleet sharing one journal) never interleave mid-record."""
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     data = ("\n" + encode_record(record)).encode("utf-8")
     if faults is not None:
         _fire(faults, "journal_append", path, data, append=True)
     with open(path, "ab") as f:
-        f.write(data)
-        f.flush()
-        if fsync:
-            os.fsync(f.fileno())
+        with _exclusive(f):
+            f.write(data)
+            f.flush()
+            if fsync:
+                os.fsync(f.fileno())
 
 
 def read_records(path: str | Path) -> tuple[list[dict], int]:
@@ -235,3 +264,118 @@ class DurableStore:
             snap, d_snap = read_records(self.path)
             jour, d_jour = read_records(self.journal_path)
         return snap + jour, d_snap + d_jour
+
+    def follower(self) -> "JournalFollower":
+        """A fresh incremental reader over this store's journal."""
+        return JournalFollower(self.journal_path)
+
+
+class JournalFollower:
+    """Incremental reader over a (possibly shared) journal file.
+
+    A fleet of serving processes appends decisions to one journal; each
+    member absorbs its peers' entries by polling.  The poll must be cheap
+    enough to run every scheduler tick, so :meth:`changed` is a single
+    ``stat`` (file size vs. bytes already consumed) and :meth:`poll` reads
+    only the bytes appended since the previous call.
+
+    Two sharp edges of a live journal are handled here:
+
+    * **Mid-append tails.**  Journal records are newline-*prefixed*, so the
+      final record in the file is never newline-terminated and a reader can
+      race a writer mid-flush.  A trailing line that fails its checksum is
+      *carried* (not dropped) and re-examined on the next poll once more
+      bytes land; it is only counted dropped when a later append terminates
+      it without it ever having checksummed.
+    * **Truncation.**  ``DurableStore.snapshot`` absorbs the journal and
+      deletes it.  A follower that observes the file shrink (or vanish)
+      resets to offset zero and replays from the start — safe because
+      journal absorption is idempotent downstream (same key, same knob).
+      Replacement is detected by inode *and* by the file's head bytes: a
+      recreated journal can reuse the deleted one's inode at the very size
+      already consumed, but its first record's checksum differs.
+    """
+
+    #: head-of-file bytes remembered to detect same-inode replacement
+    _HEAD_LEN = 64
+
+    def __init__(self, path: str | Path) -> None:
+        self.path = Path(path)
+        self._read_pos = 0          # raw bytes consumed from the file
+        self._carry = b""           # undecodable tail, awaiting more bytes
+        self._ino: int | None = None    # inode of the file last read from
+        self._head = b""            # first bytes of the current generation
+        self.dropped = 0            # torn records skipped (terminated ones)
+
+    @property
+    def position(self) -> int:
+        return self._read_pos
+
+    def changed(self) -> bool:
+        """One ``stat``: has the journal grown, shrunk, or been *replaced*
+        (snapshot deletes + a later append recreates it — possibly at the
+        very size we had consumed) since the last poll?  False for a
+        missing file we never read from.  This is a cheap *hint*: a
+        recreated file reusing both our inode and our exact consumed size
+        is only caught by :meth:`poll`'s head-bytes check (and by the next
+        append growing the file) — callers gating on ``changed()`` absorb
+        it one tick later."""
+        try:
+            st = os.stat(self.path)
+        except OSError:
+            return self._read_pos != 0
+        return st.st_size != self._read_pos or st.st_ino != self._ino
+
+    def _reset(self, ino: int | None) -> None:
+        self._read_pos = 0
+        self._carry = b""
+        self._ino = ino
+        self._head = b""
+
+    def poll(self) -> list[dict]:
+        """Records appended since the previous poll (possibly empty)."""
+        try:
+            f = open(self.path, "rb")
+        except OSError:             # vanished: forget it, replay on return
+            if self._read_pos or self._ino is not None:
+                self._reset(None)
+            return []
+        with f:
+            # fstat the OPEN fd so identity/size/bytes are one consistent
+            # view even if the path is replaced mid-poll
+            st = os.fstat(f.fileno())
+            if st.st_ino != self._ino or st.st_size < self._read_pos:
+                self._reset(st.st_ino)      # new file generation: replay
+            elif self._head and f.read(len(self._head)) != self._head:
+                self._reset(st.st_ino)      # same inode, different file
+            if st.st_size == self._read_pos:
+                return []
+            if not self._head:
+                self._head = f.read(self._HEAD_LEN)
+            f.seek(self._read_pos)
+            chunk = f.read()
+        self._read_pos += len(chunk)
+        buf = self._carry + chunk
+        *lines, tail = buf.split(b"\n")
+        records: list[dict] = []
+        for raw in lines:
+            s = raw.decode("utf-8", errors="replace").strip()
+            if not s or s.startswith("#"):
+                continue
+            rec = decode_line(s)
+            if rec is None:
+                self.dropped += 1
+            else:
+                records.append(rec)
+        # The tail has no terminating newline: it is complete iff it
+        # checksums (a strict prefix passing CRC32 *and* parsing as JSON
+        # is not a practical concern).  Otherwise hold it for next poll.
+        self._carry = b""
+        s = tail.decode("utf-8", errors="replace").strip()
+        if s and not s.startswith("#"):
+            rec = decode_line(s)
+            if rec is not None:
+                records.append(rec)
+            else:
+                self._carry = tail
+        return records

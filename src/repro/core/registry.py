@@ -10,8 +10,12 @@ across Python versions and safe to load.  Writes are atomic
 
 from __future__ import annotations
 
+import hashlib
 import json
+import math
 import os
+import platform
+import re
 import tempfile
 import threading
 from pathlib import Path
@@ -19,14 +23,16 @@ from pathlib import Path
 import msgpack
 import numpy as np
 
-from .durable import DurableStore, is_durable, read_records, write_snapshot
+from .durable import (DurableStore, JournalFollower, is_durable,
+                      read_records, write_snapshot)
 from .knobs import KnobSpace
 from .ml import make_model
 from .preprocess import PreprocessPipeline
 from .tuner import SCHEMA_VERSION, TunedSubroutine
 
 __all__ = ["pack_state", "unpack_state", "save_subroutine",
-           "load_subroutine", "ModelRegistry"]
+           "load_subroutine", "ModelRegistry", "host_fingerprint",
+           "fingerprint_slug", "fingerprint_distance"]
 
 #: backend assumed for v1 artifacts persisted before backend tagging.
 #: Legacy stores were *timed* on the cpu_blocked black box but *served* the
@@ -140,6 +146,99 @@ def load_subroutine(path: str | Path) -> TunedSubroutine:
     return sub
 
 
+# -- architecture fingerprints ------------------------------------------------
+#
+# The paper's generality claim (Intel/AMD × MKL/BLIS) is operationalised by
+# keying artifact sets on a host *fingerprint*: the handful of platform facts
+# that dominate which block config wins (CPU model, core count, cache line).
+# One registry directory then serves a heterogeneous fleet — each process
+# resolves the sub-registry matching its own hardware, with a deterministic
+# nearest-fingerprint fallback for hosts nobody calibrated on.
+
+def _read_first(path: str) -> str:
+    try:
+        with open(path, "r", encoding="utf-8", errors="replace") as f:
+            return f.readline().strip()
+    except OSError:
+        return ""
+
+
+def _probe_cpu_model() -> str:
+    """Human CPU model string: /proc/cpuinfo on Linux, platform fallbacks
+    elsewhere.  Empty string when nothing is known."""
+    try:
+        with open("/proc/cpuinfo", "r", encoding="utf-8",
+                  errors="replace") as f:
+            for line in f:
+                if line.lower().startswith(("model name", "hardware",
+                                            "processor\t")):
+                    _, _, val = line.partition(":")
+                    val = val.strip()
+                    if val:
+                        return val
+    except OSError:
+        pass
+    return platform.processor() or platform.machine() or ""
+
+
+def _probe_cache_line() -> int:
+    """Coherency line size in bytes (sysfs probe; 64 when unknown — the
+    overwhelmingly common value on the paper's platforms)."""
+    val = _read_first(
+        "/sys/devices/system/cpu/cpu0/cache/index0/coherency_line_size")
+    try:
+        size = int(val)
+    except ValueError:
+        size = 0
+    return size if size > 0 else 64
+
+
+def host_fingerprint() -> dict:
+    """Architecture fingerprint of *this* host, from cheap platform probes.
+
+    Keys: ``cpu_model`` (string, may be empty), ``machine`` (ISA, e.g.
+    ``x86_64``/``aarch64``), ``cores`` (``os.cpu_count()``), ``cache_line``
+    (bytes).  Stable across processes on one host; JSON-safe."""
+    return {
+        "cpu_model": _probe_cpu_model(),
+        "machine": platform.machine() or "",
+        "cores": int(os.cpu_count() or 1),
+        "cache_line": _probe_cache_line(),
+    }
+
+
+def fingerprint_slug(fp: dict) -> str:
+    """Deterministic directory-safe slug for a fingerprint: a normalised
+    ``{machine}-{cores}c-{cache_line}l-{model hash}`` so two processes on
+    identical hardware always resolve the same sub-registry."""
+    model = str(fp.get("cpu_model", "")).lower()
+    digest = hashlib.sha256(model.encode("utf-8")).hexdigest()[:8]
+    machine = re.sub(r"[^a-z0-9]+", "", str(fp.get("machine", "")).lower()) \
+        or "unknown"
+    return (f"{machine}-{int(fp.get('cores', 0) or 0)}c-"
+            f"{int(fp.get('cache_line', 0) or 0)}l-{digest}")
+
+
+def fingerprint_distance(a: dict, b: dict) -> float:
+    """Deterministic dissimilarity score between two fingerprints (0 for an
+    exact match).  Weighted so the facts that change which knob wins
+    dominate: a different CPU model outweighs everything else, a different
+    ISA is next, then |log2| of the core-count ratio (8→16 cores is as far
+    as 16→32), then cache-line mismatch as a tie-breaker."""
+    score = 0.0
+    if str(a.get("cpu_model", "")).lower() != \
+            str(b.get("cpu_model", "")).lower():
+        score += 100.0
+    if str(a.get("machine", "")) != str(b.get("machine", "")):
+        score += 50.0
+    ca = max(1, int(a.get("cores", 1) or 1))
+    cb = max(1, int(b.get("cores", 1) or 1))
+    score += abs(math.log2(ca / cb))
+    if int(a.get("cache_line", 0) or 0) != int(b.get("cache_line", 0) or 0):
+        score += 0.5
+    return score
+
+
 class ModelRegistry:
     """Directory of installed, backend-tagged subroutine artifacts.
 
@@ -163,6 +262,9 @@ class ModelRegistry:
         self.last_load_errors: list[tuple[str, str]] = []
         #: recovery accounting of the most recent :meth:`load_decision_cache`
         self.last_recovery: dict[str, object] = {}
+        #: how the most recent :meth:`resolve_fingerprint` chose its
+        #: sub-registry: {"mode": exact|nearest|flat, "slug", "distance"}
+        self.last_fingerprint_resolution: dict[str, object] = {}
         self._decision_store: DurableStore | None = None
 
     @property
@@ -359,3 +461,87 @@ class ModelRegistry:
         if not entries:
             return 0
         return runtime.import_cache(entries)
+
+    def journal_follower(self) -> JournalFollower:
+        """Incremental reader over this registry's decision journal — the
+        fleet-coherence poll: every serving process tails the shared
+        journal and absorbs the decisions/quarantines its peers append."""
+        return self._cache_store().follower()
+
+    # -- fingerprint-keyed sub-registries ------------------------------------
+    #: subdirectory holding one sub-registry per architecture fingerprint
+    ARCH_DIR = "arch"
+
+    #: sidecar inside each sub-registry recording the fingerprint it was
+    #: calibrated for (written by :meth:`for_fingerprint`)
+    FINGERPRINT = "fingerprint.json"
+
+    def for_fingerprint(self, fp: dict | None = None, *,
+                        create: bool = False) -> "ModelRegistry":
+        """The sub-registry keyed by ``fp`` (default: this host's probe).
+
+        With ``create=True`` the directory and its ``fingerprint.json``
+        sidecar are written — this is how a calibration/install job claims
+        the slot for the architecture it ran on.  The returned registry is
+        a full :class:`ModelRegistry` (own artifacts, versions sidecar,
+        decision cache + shared journal)."""
+        fp = dict(fp or host_fingerprint())
+        sub = ModelRegistry(self.root / self.ARCH_DIR / fingerprint_slug(fp),
+                            faults=self._faults)
+        if create:
+            write_snapshot(sub.root / self.FINGERPRINT,
+                           [{"fingerprint": fp}], faults=self._faults)
+        return sub
+
+    def fingerprints(self) -> list[tuple[str, dict]]:
+        """Every calibrated ``(slug, fingerprint)`` under ``arch/``, sorted
+        by slug.  Sub-registries with a missing/corrupt sidecar are skipped
+        (they cannot be matched, so they cannot be served)."""
+        arch = self.root / self.ARCH_DIR
+        if not arch.is_dir():
+            return []
+        out: list[tuple[str, dict]] = []
+        for child in sorted(arch.iterdir()):
+            sidecar = child / self.FINGERPRINT
+            if not child.is_dir() or not sidecar.exists():
+                continue
+            for rec in read_records(sidecar)[0]:
+                fp = rec.get("fingerprint")
+                if isinstance(fp, dict):
+                    out.append((child.name, fp))
+                    break
+        return out
+
+    def resolve_fingerprint(self, fp: dict | None = None) -> "ModelRegistry":
+        """The sub-registry a serving process on host ``fp`` should load.
+
+        Resolution order (recorded in :attr:`last_fingerprint_resolution`):
+
+        1. **exact** — a calibrated sub-registry whose slug matches ``fp``;
+        2. **nearest** — the calibrated sub-registry minimising
+           :func:`fingerprint_distance` (ties broken by slug) — an unseen
+           host borrows the closest architecture's models rather than
+           starting knob-blind;
+        3. **flat** — no ``arch/`` entries at all: the registry root
+           itself (the single-architecture layout every prior PR used).
+        """
+        fp = dict(fp or host_fingerprint())
+        slug = fingerprint_slug(fp)
+        known = self.fingerprints()
+        for cand_slug, _cand_fp in known:
+            if cand_slug == slug:
+                self.last_fingerprint_resolution = {
+                    "mode": "exact", "slug": slug, "distance": 0.0}
+                return ModelRegistry(self.root / self.ARCH_DIR / slug,
+                                     faults=self._faults)
+        if known:
+            best_slug, _best_fp, best_d = min(
+                ((s, f, fingerprint_distance(fp, f)) for s, f in known),
+                key=lambda t: (t[2], t[0]))
+            self.last_fingerprint_resolution = {
+                "mode": "nearest", "slug": best_slug, "distance": best_d}
+            return ModelRegistry(self.root / self.ARCH_DIR / best_slug,
+                                 faults=self._faults)
+        self.last_fingerprint_resolution = {
+            "mode": "flat", "slug": "", "distance": 0.0}
+        return self

@@ -227,6 +227,9 @@ class RuntimeStats:
     #: decision-journal appends that raised (persistence is best-effort on
     #: the hot path — a full disk must cost durability, not availability)
     journal_failures: int = 0
+    #: decisions/quarantines absorbed from a shared fleet journal (peer
+    #: processes' entries imported via :meth:`AdsalaRuntime.absorb_journal`)
+    journal_absorbed: int = 0
     #: process-global resolve-time backend fallbacks, per
     #: (requested, resolved) pair (from repro.backends.registry) — how often
     #: dispatch silently degraded, e.g. pallas→ref when pallas is absent
@@ -358,6 +361,7 @@ class AdsalaRuntime:
                 eval_failures=base.eval_failures,
                 import_drops_corrupt=base.import_drops_corrupt,
                 journal_failures=base.journal_failures,
+                journal_absorbed=base.journal_absorbed,
                 backends={n: dataclasses.replace(b)
                           for n, b in base.backends.items()},
                 buckets={k: dataclasses.replace(b)
@@ -1108,9 +1112,12 @@ class AdsalaRuntime:
           configs).
         * **knob under quarantine** (``stats.import_drops_quarantine``):
           quarantine records are reinstated *first* (their remaining TTL
-          resumes from now), and any decision entry whose knob is actively
-          quarantined is then dropped — a warm start must not resurrect the
-          selection that was crashing when the cache was persisted.
+          resumes from now; any of *our* cached decisions for the benched
+          knob are evicted in the same step, preserving the
+          cache-never-holds-a-quarantined-knob invariant fleet-wide), and
+          any decision entry whose knob is actively quarantined is then
+          dropped — a warm start must not resurrect the selection that was
+          crashing when the cache was persisted.
 
         Entries for unregistered subroutines import as-is — there is no
         model or space to validate against yet.
@@ -1147,6 +1154,15 @@ class AdsalaRuntime:
                             Knob(tuple(sorted(e["knob"].items()))))
                     fb = Knob(tuple(sorted(e["fallback_knob"].items())))
                     self._quarantined[qkey] = (now + float(e["ttl_s"]), fb)
+                    # same invariant quarantine_knob keeps: the cache never
+                    # contains a quarantined knob (the hit path has no
+                    # breaker check), so a peer's breaker must evict OUR
+                    # cached decisions for the knob, not just gate imports
+                    stale = [k for k, v in self._cache.items()
+                             if k[:3] == qkey[:3] and v == qkey[3]]
+                    for k in stale:
+                        del self._cache[k]
+                        self._cache_mirror.pop(k, None)
                 except Exception:    # noqa: BLE001 — corrupt record
                     self._base.import_drops_corrupt += 1
             for e in entries:
@@ -1183,6 +1199,23 @@ class AdsalaRuntime:
             while len(self._cache) > self._cache_size:
                 old, _ = self._cache.popitem(last=False)
                 self._cache_mirror.pop(old, None)
+        return n
+
+    def absorb_journal(self, records: list[dict]) -> int:
+        """Absorb a batch of shared-journal records appended by *peer*
+        processes (see :class:`repro.core.durable.JournalFollower`): the
+        fleet-coherence path.  Semantically this is :meth:`import_cache`
+        — the same version/space/quarantine drop rules apply, so a peer on
+        a different artifact generation cannot pollute this cache — with
+        the imports additionally counted in ``stats.journal_absorbed``.
+        Idempotent: re-absorbing a record this process itself journaled
+        (its own entries come back around the shared file) is a same-key
+        same-knob overwrite.  Returns the number of records imported."""
+        if not records:
+            return 0
+        n = self.import_cache(records)
+        with self._lock:
+            self._base.journal_absorbed += n
         return n
 
     def clear_cache(self) -> None:

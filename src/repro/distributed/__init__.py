@@ -1,7 +1,7 @@
 """Distributed runtime: fault tolerance, elastic re-mesh, pipeline parallel."""
 from .fault_tolerance import PreemptionGuard, RetryPolicy, StragglerDetector
-from .elastic import abstract_like, best_mesh, reshard
+from .elastic import FleetMembership, abstract_like, best_mesh, reshard
 from .pipeline import bubble_fraction, gpipe_forward
 __all__ = ["PreemptionGuard", "RetryPolicy", "StragglerDetector",
-           "abstract_like", "best_mesh", "reshard", "bubble_fraction",
-           "gpipe_forward"]
+           "FleetMembership", "abstract_like", "best_mesh", "reshard",
+           "bubble_fraction", "gpipe_forward"]

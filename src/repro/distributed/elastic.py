@@ -1,5 +1,6 @@
 """Elastic scaling: rebuild the mesh from whatever devices are alive and
-reshard state onto it.
+reshard state onto it — plus the file-based membership registry the
+multi-process serving fleet coordinates through.
 
 Checkpoints are mesh-agnostic (checkpoint/checkpointer.py saves gathered
 values + logical structure), so elasticity is:
@@ -11,19 +12,31 @@ values + logical structure), so elasticity is:
 ``best_mesh`` picks the largest (data, model) factorisation with model ≤
 requested TP degree; ``reshard`` moves live (non-checkpoint) pytrees between
 meshes directly via device_put (for downsizing without a restart).
+
+jax is imported lazily inside the mesh helpers: serving-fleet executor
+processes import this module only for :class:`FleetMembership`, and paying
+a jax import (seconds) per spawned executor for a membership file would
+dominate fleet startup.
 """
 
 from __future__ import annotations
 
-import jax
-import numpy as np
-from jax.sharding import Mesh, NamedSharding
+import json
+import os
+import time
+from pathlib import Path
 
-__all__ = ["best_mesh", "reshard", "abstract_like"]
+import numpy as np
+
+from repro.core.durable import atomic_write_bytes
+
+__all__ = ["best_mesh", "reshard", "abstract_like", "FleetMembership"]
 
 
 def best_mesh(devices=None, *, model_parallel: int = 1,
-              axis_names=("data", "model")) -> Mesh:
+              axis_names=("data", "model")):
+    import jax
+    from jax.sharding import Mesh
     devices = list(devices if devices is not None else jax.devices())
     n = len(devices)
     tp = model_parallel
@@ -34,9 +47,11 @@ def best_mesh(devices=None, *, model_parallel: int = 1,
     return Mesh(arr, axis_names)
 
 
-def abstract_like(tree, mesh: Mesh, spec_fn):
+def abstract_like(tree, mesh, spec_fn):
     """ShapeDtypeStruct tree with shardings on ``mesh``; ``spec_fn(path,
     leaf) -> PartitionSpec``."""
+    import jax
+    from jax.sharding import NamedSharding
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = []
     for path, leaf in flat:
@@ -46,11 +61,79 @@ def abstract_like(tree, mesh: Mesh, spec_fn):
     return treedef.unflatten(out)
 
 
-def reshard(tree, mesh: Mesh, spec_fn):
+def reshard(tree, mesh, spec_fn):
     """Move a live pytree onto a (different) mesh."""
+    import jax
+    from jax.sharding import NamedSharding
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = []
     for path, leaf in flat:
         spec = spec_fn(path, leaf)
         out.append(jax.device_put(leaf, NamedSharding(mesh, spec)))
     return treedef.unflatten(out)
+
+
+class FleetMembership:
+    """File-based membership registry for a serving fleet.
+
+    One JSON file per member under ``root`` (conventionally
+    ``<registry>/members/``), written atomically so a reader never sees a
+    torn record.  Liveness is heartbeat-based: a member rewrites its file
+    (fresh wall-clock stamp) on its poll tick, and :meth:`members` treats
+    anything older than ``stale_s`` as dead — a SIGKILLed executor
+    disappears from the roster without anyone cleaning up after it.  This
+    is deliberately the weakest coordination primitive that works on a
+    shared filesystem (local fleet today, NFS-mounted multi-host registry
+    tomorrow): no daemon, no locks, idempotent registration.
+    """
+
+    def __init__(self, root: str | Path, *, stale_s: float = 30.0) -> None:
+        if stale_s <= 0:
+            raise ValueError("stale_s must be > 0")
+        self.root = Path(root)
+        self.stale_s = float(stale_s)
+
+    def _path(self, name: str) -> Path:
+        safe = "".join(c if c.isalnum() or c in "-_." else "_"
+                       for c in str(name)) or "member"
+        return self.root / f"{safe}.json"
+
+    def register(self, name: str, **meta) -> Path:
+        """(Re)announce a member; extra keyword facts (pid, fingerprint
+        slug, ...) ride along in its record."""
+        record = {"name": str(name), "pid": os.getpid(),
+                  "t": time.time(), **meta}
+        path = self._path(name)
+        atomic_write_bytes(path, json.dumps(
+            record, sort_keys=True).encode("utf-8"))
+        return path
+
+    def heartbeat(self, name: str, **meta) -> None:
+        """Refresh the member's liveness stamp (same write as register)."""
+        self.register(name, **meta)
+
+    def members(self, *, live_only: bool = True) -> list[dict]:
+        """Current roster, sorted by name; with ``live_only`` (default)
+        members whose heartbeat is older than ``stale_s`` are dropped.
+        Torn/corrupt records are skipped, never raised."""
+        if not self.root.is_dir():
+            return []
+        now = time.time()
+        out = []
+        for path in sorted(self.root.glob("*.json")):
+            try:
+                rec = json.loads(path.read_text())
+            except (ValueError, OSError):
+                continue
+            if not isinstance(rec, dict):
+                continue
+            if live_only and now - float(rec.get("t", 0)) > self.stale_s:
+                continue
+            out.append(rec)
+        return out
+
+    def deregister(self, name: str) -> None:
+        try:
+            self._path(name).unlink()
+        except FileNotFoundError:
+            pass

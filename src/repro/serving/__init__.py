@@ -1,6 +1,9 @@
 """Asynchronous shape-bucketed BLAS L3 serving on top of the ADSALA runtime.
 
     BlasService — submit()/call() front-end, scheduler + bounded worker pool
+    FleetService — the same front-end sharded over N executor *processes*
+                  (shared-journal decision coherence, fingerprint-resolved
+                  artifacts; see ``repro/serving/fleet.py``)
     ServeConfig — bucket/flush knobs (max_batch, linger_ms, workers, ...)
     ServeStats  — service-level counters (per-bucket detail on the runtime)
     Retuner     — drift-aware online retraining loop (opt-in; pass one to
@@ -24,12 +27,14 @@ seeded fault and crash-recovery scenarios.
 
 from .budget import BudgetConfig, ErrorBudgetLedger
 from .faults import FaultPlan, FaultSpec, InjectedFault
+from .fleet import ExecutorDiedError, FleetConfig, FleetService
 from .retune import Retuner, RetuneConfig, RetuneStats
 from .service import (AdmissionRejectedError, BlasService,
                       DeadlineExpiredError, ExecutionFailedError,
                       ServeConfig, ServeStats, ServiceClosedError, bucket_key)
 
 __all__ = ["BlasService", "ServeConfig", "ServeStats", "bucket_key",
+           "FleetService", "FleetConfig", "ExecutorDiedError",
            "Retuner", "RetuneConfig", "RetuneStats",
            "BudgetConfig", "ErrorBudgetLedger",
            "FaultPlan", "FaultSpec", "InjectedFault",

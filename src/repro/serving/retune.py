@@ -132,6 +132,8 @@ class RetuneStats:
     observe_failures: int = 0   # telemetry-ingestion raises (survived)
     refit_failures: int = 0     # retune raises (survived; backoff applied)
     explorations: int = 0       # epsilon decision-cache overrides served
+    abandoned_stops: int = 0    # stop() joins that timed out mid-refit
+                                # (thread kept halted, never nulled alive)
 
 
 class _SubState:
@@ -481,13 +483,24 @@ class Retuner:
                                         name="adsala-retuner", daemon=True)
         self._thread.start()
 
-    def stop(self, timeout: float = 10.0) -> None:
-        """Halt the loop; no swap runs after this returns.  Idempotent."""
+    def stop(self, timeout: float = 10.0) -> bool:
+        """Halt the loop; idempotent.  Returns True when the thread fully
+        stopped (no swap runs after a True return).  A join that times out
+        — the thread is mid-refit and a refit can outlast any reasonable
+        close budget — returns False and counts an abandoned stop; the
+        thread reference is *kept* (not leaked silently, not nulled while
+        alive) so a later stop() can finish the join, and the halted loop
+        exits on its own once the in-flight step completes."""
         self._halt.set()
         t = self._thread
-        if t is not None:
-            t.join(timeout=timeout)
-            self._thread = None
+        if t is None:
+            return True
+        t.join(timeout=timeout)
+        if t.is_alive():
+            self.stats.abandoned_stops += 1
+            return False
+        self._thread = None
+        return True
 
     def _loop(self) -> None:
         # consecutive failing steps back the poll off exponentially (capped

@@ -253,6 +253,8 @@ class ServeStats:
                                   # expired during the ladder's retries)
     worker_respawns: int = 0      # dead workers detected and replaced
     warm_start_errors: int = 0    # registry load/save failures (survived)
+    retuner_abandoned: int = 0    # close() retuner joins that timed out
+                                  # mid-refit (bounded by the close budget)
     # -- error budgets (per-rung state: BlasService.budget_state()) --
     budget_skips: int = 0         # ladder rungs skipped outright (budget
                                   # exhausted: no attempts, no sleeps)
@@ -608,6 +610,7 @@ class BlasService:
         finish (hung backend, dead workers past the drain timeout) are
         *failed* with :class:`ServiceClosedError`, never leaked — no caller
         blocks forever on a future the service has abandoned."""
+        deadline = time.monotonic() + max(0.0, timeout)
         with self._mutex:
             if self._closed:
                 return
@@ -629,7 +632,16 @@ class BlasService:
             self._trace_cm.__exit__(None, None, None)
             self._trace_cm = None
         if self.retuner is not None:        # before the cache is persisted:
-            self.retuner.stop()             # no swap may race the export
+            # no swap may race the export — but a retuner mid-refit can
+            # outlast any close budget, so the join is bounded by whatever
+            # remains of the caller's timeout.  A timed-out join abandons
+            # the refit *counted*, never silently: the halted thread exits
+            # after its in-flight step, and its swap (if any) lands on a
+            # runtime nobody serves from anymore
+            remaining = max(0.1, deadline - time.monotonic())
+            if not self.retuner.stop(timeout=remaining):
+                with self._mutex:
+                    self.stats.retuner_abandoned += 1
         if self.registry is not None:
             try:
                 self.registry.save_decision_cache(self.runtime)
@@ -779,7 +791,7 @@ class BlasService:
             claims[idx] = bucket
             if self._faults is not None:
                 self._faults.fire("worker", worker=idx, key=bucket.key)
-            self._execute(bucket)
+            self._execute(bucket, idx)
             claims[idx] = None
             poll = 0.001
 
@@ -812,9 +824,9 @@ class BlasService:
             width <<= 1
         return min(width, self.config.max_batch)
 
-    def _execute(self, bucket: _Bucket) -> None:
-        """Execute one bucket: drop deadline-expired requests, then run the
-        survivors through the degradation ladder (every future resolves)."""
+    def _execute(self, bucket: _Bucket, worker_idx: int = 0) -> None:
+        """Execute one bucket: drop deadline-expired requests, then hand the
+        survivors to :meth:`_dispatch` (every future resolves)."""
         now = time.monotonic()
         live, expired = [], []
         for r in bucket.requests:
@@ -829,7 +841,15 @@ class BlasService:
                 self._pending -= n
                 self._done.notify_all()
         if live:
-            self._execute_chain(bucket, live)
+            self._dispatch(bucket, live, worker_idx)
+
+    def _dispatch(self, bucket: _Bucket, reqs: list,
+                  worker_idx: int) -> None:
+        """Execution transport seam: the in-process service runs the
+        degradation ladder right here on the worker thread;
+        :class:`~repro.serving.fleet.FleetService` overrides this to ship
+        the bucket to the executor process paired with ``worker_idx``."""
+        self._execute_chain(bucket, reqs)
 
     def budget_state(self) -> dict:
         """Per-(backend, op) error-budget rung state (breaker state,

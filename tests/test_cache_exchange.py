@@ -1,0 +1,196 @@
+"""export_cache/import_cache round trips between two LIVE runtimes in one
+process — the single-process analogue of the fleet's shared-journal absorb.
+
+The fleet-coherence guarantees all reduce to import_cache's merge rules
+when the importer is *non-empty*: same-key collisions (importer's entry
+overwritten by the exporter's — journal-last-wins), version-mismatched
+entries dropped, quarantines merged with rebased TTLs (and they evict the
+importer's now-benched cached knobs), budget records restoring/parking on
+the importer's ledger."""
+
+import pytest
+
+from repro.core import AdsalaRuntime
+from repro.core.knobs import Knob
+from repro.serving.budget import BudgetConfig, ErrorBudgetLedger
+
+BE = "cpu_blocked"
+K_A = Knob((("bm", 128), ("bn", 128)))
+K_B = Knob((("bm", 64), ("bn", 64)))
+K_C = Knob((("bm", 32), ("bn", 32)))
+
+
+class StubSub:
+    """Fixed-knob model with observable eval count and settable version."""
+
+    def __init__(self, knob, backend=BE, op="gemm", dtype_bytes=4,
+                 version=0):
+        self.backend, self.op, self.dtype_bytes = backend, op, dtype_bytes
+        self.knob = knob
+        self.artifact_version = version
+        self.evals = 0
+
+    def select(self, dims):
+        self.evals += 1
+        return self.knob
+
+
+def test_import_into_nonempty_runtime_merges_and_overwrites():
+    """Exporter's entries land beside the importer's; a same-key collision
+    goes to the exporter (the imported record is newer information, the
+    same rule that makes journal replay last-wins)."""
+    rt_a = AdsalaRuntime()
+    rt_b = AdsalaRuntime()
+    rt_a.register(StubSub(K_A))
+    sub_b = StubSub(K_B)
+    rt_b.register(sub_b)
+    # A decided (64,...) and (128,...); B already decided (128,...) —
+    # differently, its model picks K_B — plus its own (256,...)
+    rt_a.select("gemm", (64, 64, 64), 4, backend=BE)
+    rt_a.select("gemm", (128, 64, 64), 4, backend=BE)
+    rt_b.select("gemm", (128, 64, 64), 4, backend=BE)
+    rt_b.select("gemm", (256, 64, 64), 4, backend=BE)
+    assert rt_b.import_cache(rt_a.export_cache()) == 2
+    assert rt_b.cache_len() == 3
+    # collision key now serves A's knob — as a cache hit, no re-eval
+    evals_before = sub_b.evals
+    assert rt_b.select("gemm", (128, 64, 64), 4, backend=BE) == K_A
+    assert rt_b.select("gemm", (64, 64, 64), 4, backend=BE) == K_A
+    assert rt_b.select("gemm", (256, 64, 64), 4, backend=BE) == K_B
+    assert sub_b.evals == evals_before
+    s = rt_b.stats
+    assert s.import_drops_version == 0 and s.import_drops_knob == 0
+
+
+def test_import_version_mismatch_drops_only_stale_entries():
+    """B runs generation 2 of the gemm artifact; A's generation-1
+    decisions must not warm B's cache — but A's entries for a subroutine
+    B has never registered import as-is (nothing to validate against)."""
+    rt_a = AdsalaRuntime()
+    rt_b = AdsalaRuntime()
+    rt_a.register(StubSub(K_A, version=1))
+    rt_a.register(StubSub(K_A, op="syrk", version=1))
+    rt_b.register(StubSub(K_B, version=2))          # newer gemm generation
+    rt_a.select("gemm", (64, 64, 64), 4, backend=BE)
+    rt_a.select("syrk", (64, 64), 4, backend=BE)
+    imported = rt_b.import_cache(rt_a.export_cache())
+    assert imported == 1                            # the syrk entry only
+    assert rt_b.stats.import_drops_version == 1
+    # the dropped shape re-evaluates under B's own model
+    sub_b_evals = rt_b.select("gemm", (64, 64, 64), 4, backend=BE)
+    assert sub_b_evals == K_B
+    assert rt_b.stats.model_evals == 1
+
+
+def test_import_quarantine_merge_rebases_ttl_and_evicts():
+    """A's active quarantine crosses into B: B's cached decisions for the
+    benched knob are evicted in the same import, B's miss path forces the
+    fallback, and the TTL continues from *remaining* time, not full."""
+    rt_a = AdsalaRuntime()
+    rt_b = AdsalaRuntime()
+    rt_b.register(StubSub(K_A))                     # B's model picks K_A
+    rt_b.select("gemm", (64, 64, 64), 4, backend=BE)
+    assert rt_b.cache_len() == 1
+    rt_a.quarantine_knob("gemm", 4, BE, K_A, fallback=K_C, ttl_s=30.0)
+    records = rt_a.export_cache()
+    assert records[0]["quarantine"] == 1
+    assert 0.0 < records[0]["ttl_s"] <= 30.0        # rebased to remaining
+    assert rt_b.import_cache(records) == 0          # no decisions rode along
+    assert rt_b.is_quarantined("gemm", 4, BE, K_A)
+    # the cached K_A decision did not survive the merge...
+    assert rt_b.cache_len() == 0
+    # ...and re-selection is forced onto the quarantine's fallback
+    assert rt_b.select("gemm", (64, 64, 64), 4, backend=BE) == K_C
+    assert rt_b.stats.quarantine_forced == 1
+    remaining = rt_b.quarantined_knobs()[(BE, "gemm", 4, K_A)]
+    assert 0.0 < remaining <= 30.0
+
+
+def test_import_drops_decision_whose_knob_is_being_quarantined():
+    """Quarantine records are reinstated FIRST, so a decision entry in the
+    same import whose knob they bench is dropped — order within one
+    export payload cannot resurrect a crashing knob."""
+    rt_a = AdsalaRuntime()
+    rt_b = AdsalaRuntime()
+    rt_a.register(StubSub(K_A))
+    rt_a.select("gemm", (64, 64, 64), 4, backend=BE)   # caches K_A
+    rt_a.quarantine_knob("syrk", 4, BE, K_A, fallback=K_C, ttl_s=30.0)
+    # hand-build the hostile ordering: decision before its own quarantine
+    records = [r for r in rt_a.export_cache() if not r.get("quarantine")]
+    records.append({"quarantine": 1, "backend": BE, "op": "gemm",
+                    "dtype_bytes": 4, "knob": K_A.dict,
+                    "fallback_knob": K_C.dict, "ttl_s": 30.0})
+    assert rt_b.import_cache(records) == 0
+    assert rt_b.stats.import_drops_quarantine == 1
+    assert rt_b.cache_len() == 0
+
+
+def test_budget_records_restore_attached_ledger_with_precedence():
+    """Budget records ride export_cache: an importer with an ATTACHED
+    ledger has its rung state replaced by the exporter's (imported state
+    wins over local history), and ``probe_in_s`` rebases onto the
+    importer's clock."""
+    cfg = BudgetConfig(window=8, threshold=0.5, min_count=2,
+                       probe_interval_s=60.0)
+    rt_a = AdsalaRuntime()
+    led_a = ErrorBudgetLedger(cfg)
+    rt_a.attach_budgets(led_a)
+    for _ in range(4):
+        led_a.record(BE, "gemm", False)
+    assert led_a.admit(BE, "gemm") == "skip"        # breaker opens
+    rt_b = AdsalaRuntime()
+    led_b = ErrorBudgetLedger(cfg)
+    rt_b.attach_budgets(led_b)
+    for _ in range(4):
+        led_b.record(BE, "gemm", True)              # locally healthy...
+    assert rt_b.import_cache(rt_a.export_cache()) == 0
+    # ...but the imported open breaker takes precedence
+    snap = led_b.snapshot()[(BE, "gemm")]
+    assert snap["state"] == "open"
+    assert snap["failure_rate"] == 1.0
+    assert led_b.admit(BE, "gemm") == "skip"        # probe not yet due
+
+
+def test_budget_records_park_until_ledger_attaches():
+    """Importing into a runtime with NO ledger parks the budget records;
+    attach_budgets later must deliver them (the fleet executor's startup
+    order: warm start first, budgets attached by the service after)."""
+    cfg = BudgetConfig(window=8, threshold=0.5, min_count=2,
+                       probe_interval_s=60.0)
+    rt_a = AdsalaRuntime()
+    led_a = ErrorBudgetLedger(cfg)
+    rt_a.attach_budgets(led_a)
+    for _ in range(4):
+        led_a.record(BE, "gemm", False)
+    assert led_a.admit(BE, "gemm") == "skip"
+    rt_b = AdsalaRuntime()
+    assert rt_b.import_cache(rt_a.export_cache()) == 0   # parked
+    led_b = ErrorBudgetLedger(cfg)
+    rt_b.attach_budgets(led_b)
+    assert led_b.snapshot()[(BE, "gemm")]["state"] == "open"
+    assert led_b.admit(BE, "gemm") == "skip"
+
+
+def test_export_order_budget_then_quarantine_then_lru():
+    """The export layout the import rules depend on: budget records first,
+    quarantines next, decisions LRU-oldest-first last."""
+    rt = AdsalaRuntime(touch_sample=1)
+    led = ErrorBudgetLedger(BudgetConfig(window=4, threshold=0.5,
+                                         min_count=2))
+    rt.attach_budgets(led)
+    led.record(BE, "gemm", False)
+    rt.register(StubSub(K_A))
+    rt.select("gemm", (64, 64, 64), 4, backend=BE)
+    rt.select("gemm", (128, 64, 64), 4, backend=BE)
+    rt.select("gemm", (64, 64, 64), 4, backend=BE)  # refresh (64,...)
+    rt.quarantine_knob("syrk", 4, BE, K_B, fallback=K_C, ttl_s=10.0)
+    recs = rt.export_cache()
+    kinds = [("budget" if r.get("budget") else
+              "quarantine" if r.get("quarantine") else "decision")
+             for r in recs]
+    assert kinds == ["budget", "quarantine", "decision", "decision"]
+    decisions = [r for r in recs if not r.get("budget")
+                 and not r.get("quarantine")]
+    # LRU-oldest first: (128,...) went stale when (64,...) was re-touched
+    assert decisions[0]["dims"] == [128, 64, 64]
+    assert decisions[1]["dims"] == [64, 64, 64]

@@ -365,3 +365,85 @@ def test_service_starts_and_stops_retuner(tuned):
         assert svc.retuner is ret
         assert ret._thread is not None and ret._thread.is_alive()
     assert ret._thread is None or not ret._thread.is_alive()
+
+
+# ---------------------------------------------------------------------------
+# bounded shutdown: stop() join budget + abandoned-refit accounting
+# ---------------------------------------------------------------------------
+
+def test_retuner_stop_abandons_stuck_thread_without_leaking():
+    rt = AdsalaRuntime()
+    ret = Retuner(rt, config=RetuneConfig(interval_s=60.0))
+    release = threading.Event()
+    stuck = threading.Thread(target=release.wait, daemon=True)
+    stuck.start()
+    ret._thread = stuck                 # simulate a thread wedged mid-refit
+    t0 = time.monotonic()
+    assert ret.stop(timeout=0.2) is False
+    assert time.monotonic() - t0 < 2.0  # the join was bounded, not 10 s
+    assert ret.stats.abandoned_stops == 1
+    # the thread reference is KEPT — abandoned, counted, not leaked
+    assert ret._thread is stuck
+    release.set()
+    assert ret.stop(timeout=5.0) is True
+    assert ret._thread is None
+    assert ret.stats.abandoned_stops == 1
+
+
+def test_retuner_stop_counts_each_abandonment():
+    rt = AdsalaRuntime()
+    ret = Retuner(rt, config=RetuneConfig(interval_s=60.0))
+    release = threading.Event()
+    stuck = threading.Thread(target=release.wait, daemon=True)
+    stuck.start()
+    ret._thread = stuck
+    assert ret.stop(timeout=0.05) is False
+    assert ret.stop(timeout=0.05) is False
+    assert ret.stats.abandoned_stops == 2
+    release.set()
+    stuck.join(timeout=5.0)
+
+
+class _RecordingRetuner:
+    """start()/stop() shim standing in for a Retuner whose refit outlasts
+    the service's close budget."""
+
+    def __init__(self, stop_result=True):
+        self.stop_result = stop_result
+        self.stop_timeouts = []
+        self.starts = 0
+
+    def start(self):
+        self.starts += 1
+
+    def stop(self, timeout=10.0):
+        self.stop_timeouts.append(timeout)
+        return self.stop_result
+
+
+def test_service_close_bounds_retuner_join_by_remaining_budget():
+    rt = AdsalaRuntime()
+    shim = _RecordingRetuner(stop_result=True)
+    svc = BlasService(runtime=rt,
+                      config=ServeConfig(backend="ref", workers=1),
+                      retuner=shim)
+    svc.close(timeout=4.0)
+    assert shim.starts == 1
+    assert len(shim.stop_timeouts) == 1
+    # the join got what was LEFT of the close budget, not a fixed default:
+    # bounded above by the caller's timeout, floored at the 0.1 s minimum
+    assert 0.1 <= shim.stop_timeouts[0] <= 4.0
+    assert svc.stats.retuner_abandoned == 0
+
+
+def test_service_close_counts_abandoned_retuner():
+    rt = AdsalaRuntime()
+    shim = _RecordingRetuner(stop_result=False)
+    svc = BlasService(runtime=rt,
+                      config=ServeConfig(backend="ref", workers=1),
+                      retuner=shim)
+    svc.close(timeout=2.0)
+    assert svc.stats.retuner_abandoned == 1
+    # close() stays idempotent; the second call must not re-join the retuner
+    svc.close(timeout=2.0)
+    assert len(shim.stop_timeouts) == 1
